@@ -1,0 +1,54 @@
+"""Engine micro-benchmarks on this host (CPU): relative cost of the EULER
+modes vs exact matmul, and the codec/plane-construction overhead.  Wall
+times are CPU-only (TPU is the target); the RATIOS between modes are the
+informative signal (the euler two-plane path should cost ~2x exact)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EXACT, EulerConfig, euler_matmul, from_variant
+
+
+def _time(fn, *args, iters=10):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(m=512, k=512, n=512):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    rows = []
+    for name, cfg in [
+        ("exact", EXACT),
+        ("posit16_exact", EulerConfig(width=16, mode="posit")),
+        ("euler16_L-21b", from_variant(16, "L-21b")),
+        ("euler8_L-21b", from_variant(8, "L-21b")),
+        ("euler32_L-21b", from_variant(32, "L-21b")),
+        ("quant_only16", EulerConfig(width=16, mode="quant_only")),
+    ]:
+        f = jax.jit(lambda x, y, c=cfg: euler_matmul(x, y, c))
+        us = _time(f, a, b)
+        rows.append((name, us))
+    return rows
+
+
+def main():
+    rows = run()
+    base = rows[0][1]
+    print("mode,us_per_call,ratio_vs_exact")
+    for name, us in rows:
+        print(f"{name},{us:.1f},{us / base:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""§Perf hillclimb harness: re-lower one (arch × shape × mesh) cell under a
+named change and diff its roofline terms against the recorded baseline.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch yi-6b \\
+      --shape train_4k --mesh single --change fuse_planes
+
+Changes (each encodes one hypothesis from EXPERIMENTS.md §Perf):
+  baseline        paper-faithful engine (two plane-dots per matmul)
+  fuse_planes     ONE concat-K dot per matmul (same FLOPs fwd, 1 MXU pass,
+                  1 output reduction; costs extra backward FLOPs)
+  no_rem          drop the rem-plane dot entirely (quant_only numerics —
+                  halves engine FLOPs; accuracy knob, Table I row "posit")
+  loss_chunk_2x   double the xent chunk (fewer loss-scan steps, bigger slab)
+  loss_chunk_half halve the xent chunk
+  kv_chunk_2x     double flash-attention K block
+  remat_dots      save dot operands instead of recomputing (memory<->compute)
+  seq_chunk_64    SSD chunk 64 (ssm/hybrid cells)
+  cache_p8        posit-8 pattern KV cache (decode cells; halves cache reads)
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from repro import configs as C
+from repro.configs import euler_nce
+
+
+def apply_change(change: str, arch: str):
+    """Returns (ecfg, cfg_override, extra run_cell kwargs)."""
+    import jax.numpy as jnp
+    full = C.get_config(arch).FULL
+    ecfg = euler_nce.for_arch(full.dtype)
+    cfg = None
+    kw = {}
+    if change == "baseline":
+        pass
+    elif change == "head_shard":
+        kw["ctx_overrides"] = {"attn_head_shard": True}
+    elif change == "bf16_gather":
+        kw["ctx_overrides"] = {"moe_gather_dtype": jnp.bfloat16}
+    elif change == "remat_dots":
+        kw["model_kwargs"] = {"remat_policy": "dots"}
+    elif change == "head_shard_fuse":
+        kw["ctx_overrides"] = {"attn_head_shard": True}
+        ecfg = ecfg.replace(fuse_planes=True)
+    elif change == "moe_opt":  # arctic: bf16 weight gathers + SP x-gather
+        kw["ctx_overrides"] = {"attn_head_shard": True,
+                               "moe_gather_dtype": jnp.bfloat16}
+    elif change == "ga_2":      # fewer microsteps => fewer ZeRO-3 regathers
+        kw["grad_accum"] = 2
+    elif change == "ga_4":
+        kw["grad_accum"] = 4
+    elif change == "fuse_planes":
+        ecfg = ecfg.replace(fuse_planes=True)
+    elif change == "no_rem":
+        ecfg = ecfg.replace(mode="posit")
+    elif change == "loss_chunk_2x":
+        cfg = full.replace(loss_chunk=full.loss_chunk * 2)
+    elif change == "loss_chunk_half":
+        cfg = full.replace(loss_chunk=max(full.loss_chunk // 2, 64))
+    elif change == "kv_chunk_2x":
+        cfg = full.replace(kv_chunk=full.kv_chunk * 2,
+                           q_chunk=full.q_chunk * 2)
+    elif change == "seq_chunk_64":
+        cfg = full.replace(ssm_chunk=64)
+    elif change == "cache_p8":
+        # Posit-(8,0) pattern KV cache: uint8 words written through the
+        # bit-accurate codec, decoded on read (layers.cache_encode/decode)
+        cfg = full.replace(cache_dtype="uint8")
+    else:
+        raise SystemExit(f"unknown change {change}")
+    return ecfg, cfg, kw
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--change", default="baseline")
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import run_cell
+    from benchmarks.roofline import analyze_record
+
+    ecfg, cfg, kw = apply_change(args.change, args.arch)
+    rec = run_cell(args.arch, args.shape, args.mesh == "multi",
+                   ecfg=ecfg, cfg_override=cfg, **kw)
+    os.makedirs(args.out, exist_ok=True)
+    fn = (f"{args.out}/{args.arch}__{args.shape}__{args.mesh}"
+          f"__{args.change}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    if not rec.get("ok"):
+        print("FAILED:", rec.get("error"))
+        raise SystemExit(1)
+    r = analyze_record(rec)
+    print(json.dumps(r, indent=1))
+
+    # diff vs baseline artifact if present
+    base_fn = (f"artifacts/dryrun/{args.arch}__{args.shape}__"
+               f"{args.mesh}.json")
+    if args.change != "baseline" and os.path.exists(base_fn):
+        with open(base_fn) as f:
+            base = analyze_record(json.load(f))
+        print("\nchange vs baseline:")
+        for k in ("compute_s", "memory_s", "collective_s", "bound_s",
+                  "mfu_at_bound", "mem_gib"):
+            b, n = base.get(k, 0), r.get(k, 0)
+            delta = (n - b) / b * 100 if b else float("nan")
+            print(f"  {k:14s} {b:12.6f} -> {n:12.6f}  ({delta:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

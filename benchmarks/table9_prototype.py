@@ -1,0 +1,50 @@
+"""Table IX reproduction: Tiny-YOLOv3 @ Pynq-Z2 latency/power/energy.
+
+The prototype numbers are silicon measurements; we reproduce the table from
+the embedded records and validate them against a first-principles throughput
+model: Tiny-YOLOv3 needs 5.6 GOPS/frame, the engine sustains
+TP_P8(freq) x utilization, so latency = 5.6e9 / (TP x u).  The utilization u
+is calibrated once on L-21b and must then predict every other variant's
+measured latency within a tight band — evidence the table is internally
+consistent with the ASIC throughput identities (Table IV).
+"""
+from __future__ import annotations
+
+from repro.core import hwmodel as HW
+
+GOPS_PER_FRAME = 5.6  # paper Table IX caption
+
+
+def run():
+    # calibrate utilization on L-21b
+    lat_ref, pw_ref, en_ref = HW.PROTOTYPE["L-21b"]
+    # Pynq-Z2 runs far below ASIC freq; model: effective GOPS = k * freq
+    tp_ref = HW.perf_metrics("L-21b")["tp_p8_gops"]
+    k = GOPS_PER_FRAME / (lat_ref * 1e-3) / tp_ref  # effective utilization
+    rows = []
+    for var, (lat, pw, en) in HW.PROTOTYPE.items():
+        tp = HW.perf_metrics(var)["tp_p8_gops"]
+        pred_lat = GOPS_PER_FRAME / (tp * k) * 1e3
+        pred_en = pw * pred_lat
+        rows.append((var, lat, pw, en, pred_lat, 100 * (pred_lat - lat) / lat))
+    return rows, k
+
+
+def main():
+    rows, k = run()
+    print(f"# calibrated FPGA utilization factor k={k:.4f}")
+    print("variant,latency_ms,power_W,energy_mJ,pred_latency_ms,deviation_%")
+    worst = 0.0
+    for var, lat, pw, en, pl, dev in rows:
+        print(f"{var},{lat},{pw},{en},{pl:.1f},{dev:+.1f}")
+        worst = max(worst, abs(dev))
+    print("# prior platforms")
+    for name, (lat, pw, en) in HW.PROTOTYPE_PRIOR.items():
+        print(f"{name},{lat},{pw},{en},,")
+    best = min(rows, key=lambda r: r[3])
+    print(f"# best energy/frame: {best[0]} at {best[3]} mJ "
+          f"(paper: L-21b 22.6 mJ) — consistency worst-case {worst:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Tables VI-VIII proxy reproduction: application-level accuracy under
+EULER-ADAS numerics.
+
+ImageNet/KITTI are not available offline, so the paper's accuracy DELTAS are
+validated on trainable-offline proxies (DESIGN.md §7.4):
+
+  W1  language modelling  — small transformer on SyntheticLM; metric:
+      next-token top-1 accuracy (ADAS NLP rows analogue)
+  W2  classification      — MLP on synthetic gaussian-cluster images
+      (perception rows analogue)
+
+Protocol mirrors the paper: train at FP32, then EVALUATE the same weights
+under each arithmetic configuration (post-training quantized inference).
+Claim under test: Posit-16/32 EULER variants stay within ~1.5pp of FP32;
+Posit-8 degrades more; log-fxp baselines are worse than posit at equal width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EulerConfig, from_variant
+from repro.data import SyntheticLM
+from repro.models.config import ModelConfig
+from repro.models.layers import Ctx
+from repro.models.transformer import Model
+from repro.optim import AdamW, cosine_schedule
+from repro.training import init_state, make_train_step
+
+LM_CFG = ModelConfig(name="acc-lm", family="dense", n_layers=3, d_model=160,
+                     n_heads=4, n_kv_heads=2, d_ff=384, vocab=512,
+                     loss_chunk=64, q_chunk=64, kv_chunk=64)
+
+
+def _train_lm(steps=150, seed=0):
+    m = Model(LM_CFG, EulerConfig(mode="exact"))
+    ctx = Ctx(ecfg=m.ecfg)
+    opt = AdamW(lr=cosine_schedule(3e-3, 20, steps), weight_decay=0.0)
+    state = init_state(m, opt, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(m, opt, ctx))
+    data = SyntheticLM(vocab=LM_CFG.vocab, seed=seed + 1)
+    for i in range(steps):
+        state, _ = step(state, data.batch(i, 8, 128))
+    return m, state.params, data
+
+
+def _lm_accuracy(m, params, data, ecfg, n_batches=2):
+    ctx = Ctx(ecfg=ecfg)
+    m2 = Model(LM_CFG, ecfg)
+    acc = n = 0
+    for i in range(1000, 1000 + n_batches):
+        b = data.batch(i, 6, 128)
+        h, _, _ = jax.jit(lambda p, x: m2.forward(p, x, ctx))(params, b["inputs"])
+        logits = m2.head(params, h, ctx)
+        pred = jnp.argmax(logits, -1)
+        acc += float((pred == b["labels"]).sum())
+        n += b["labels"].size
+    return 100.0 * acc / n
+
+
+def _make_cluster_data(seed=0, n_cls=16, dim=64, n=4096):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_cls, dim)).astype(np.float32) * 2
+    y = rng.integers(0, n_cls, n)
+    x = centers[y] + rng.normal(size=(n, dim)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y), centers
+
+
+def _train_mlp(seed=0):
+    x, y, _ = _make_cluster_data(seed)
+    rng = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(rng)
+    params = {"w1": jax.random.normal(k1, (64, 128)) * 0.125,
+              "w2": jax.random.normal(k2, (128, 16)) * 0.09}
+
+    def fwd(p, x, ecfg):
+        from repro.core.engine import euler_matmul
+        h = jax.nn.relu(euler_matmul(x, p["w1"], ecfg))
+        return euler_matmul(h, p["w2"], ecfg)
+
+    exact = EulerConfig(mode="exact")
+
+    @jax.jit
+    def step(p, lr):
+        def loss(p):
+            logits = fwd(p, x, exact)
+            return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
+        g = jax.grad(loss)(p)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    for i in range(300):
+        params = step(params, 0.15)
+    return params, fwd, x, y
+
+
+def _mlp_accuracy(params, fwd, x, y, ecfg):
+    logits = fwd(params, x, ecfg)
+    return 100.0 * float((jnp.argmax(logits, -1) == y).mean())
+
+
+CONFIGS = [
+    ("FP32", EulerConfig(mode="exact")),
+    ("Posit-8 exact", EulerConfig(width=8, bounded=False, mode="posit")),
+    ("Posit-16 exact", EulerConfig(width=16, bounded=False, mode="posit")),
+    ("Posit-32 exact", EulerConfig(width=32, bounded=False, mode="posit")),
+    ("P8 L-2", from_variant(8, "L-2")),
+    ("P8 L-21b", from_variant(8, "L-21b")),
+    ("P16 L-2", from_variant(16, "L-2")),
+    ("P16 L-21b", from_variant(16, "L-21b")),
+    ("P32 L-2", from_variant(32, "L-2")),
+    ("P32 L-21b", from_variant(32, "L-21b")),
+    ("LogFxP-8", EulerConfig(width=8, mode="logfxp", stages=3)),
+    ("LogFxP-16", EulerConfig(width=16, mode="logfxp", stages=3)),
+]
+
+
+def run(lm_steps=120):
+    m, params, data = _train_lm(steps=lm_steps)
+    mlp_p, fwd, x, y = _train_mlp()
+    rows = []
+    for name, ecfg in CONFIGS:
+        lm = _lm_accuracy(m, params, data, ecfg)
+        mlp = _mlp_accuracy(mlp_p, fwd, x, y, ecfg)
+        rows.append((name, lm, mlp))
+    return rows
+
+
+def main():
+    rows = run()
+    fp32_lm, fp32_mlp = rows[0][1], rows[0][2]
+    print("config,lm_top1_%,lm_delta_pp,mlp_acc_%,mlp_delta_pp")
+    for name, lm, mlp in rows:
+        print(f"{name},{lm:.2f},{lm - fp32_lm:+.2f},{mlp:.2f},{mlp - fp32_mlp:+.2f}")
+    by = {r[0]: r for r in rows}
+    checks = [
+        ("P16 L-21b within 1.5pp of FP32 (LM)",
+         abs(by["P16 L-21b"][1] - fp32_lm) <= 1.5),
+        ("P32 L-2 within 1.5pp of FP32 (LM)",
+         abs(by["P32 L-2"][1] - fp32_lm) <= 1.5),
+        ("P8 degrades more than P16 (LM)",
+         (fp32_lm - by["P8 L-21b"][1]) >= (fp32_lm - by["P16 L-21b"][1]) - 0.2),
+        ("Posit beats log-fxp at 16b (MLP)",
+         by["P16 L-2"][2] >= by["LogFxP-16"][2] - 0.5),
+    ]
+    for name, ok in checks:
+        print(f"# claim: {name}: {'OK' if ok else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Mini Table-VI: accuracy of one trained model evaluated under every
+EULER-ADAS operating point (post-training quantized inference).
+
+  PYTHONPATH=src python examples/precision_sweep.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import EulerConfig, from_variant, VARIANT_NAMES
+from repro.data import SyntheticLM
+from repro.models.config import ModelConfig
+from repro.models.layers import Ctx
+from repro.models.transformer import Model
+from repro.optim import AdamW, cosine_schedule
+from repro.training import init_state, make_train_step
+
+CFG = ModelConfig(name="sweep", family="dense", n_layers=2, d_model=128,
+                  n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
+                  loss_chunk=64, q_chunk=64, kv_chunk=64)
+
+model = Model(CFG, EulerConfig(mode="exact"))
+ctx = Ctx(ecfg=model.ecfg)
+opt = AdamW(lr=cosine_schedule(3e-3, 20, 150), weight_decay=0.0)
+state = init_state(model, opt, jax.random.PRNGKey(0))
+step = jax.jit(make_train_step(model, opt, ctx))
+data = SyntheticLM(vocab=CFG.vocab, seed=4)
+print("training FP32 reference (150 steps)...")
+for i in range(150):
+    state, out = step(state, data.batch(i, 8, 128))
+
+
+def top1(ecfg):
+    m = Model(CFG, ecfg)
+    c = Ctx(ecfg=ecfg)
+    acc = n = 0
+    for i in range(500, 503):
+        b = data.batch(i, 8, 128)
+        h, _, _ = jax.jit(lambda p, x: m.forward(p, x, c))(state.params,
+                                                           b["inputs"])
+        pred = jnp.argmax(m.head(state.params, h, c), -1)
+        acc += float((pred == b["labels"]).sum())
+        n += b["labels"].size
+    return 100 * acc / n
+
+
+base = top1(EulerConfig(mode="exact"))
+print(f"\nFP32 top-1: {base:.2f}%\n")
+print(f"{'width':>5} {'variant':>7} {'top-1 %':>8} {'delta pp':>9}")
+for width in (8, 16, 32):
+    for v in VARIANT_NAMES:
+        a = top1(from_variant(width, v))
+        print(f"{width:5d} {v:>7} {a:8.2f} {a - base:+9.2f}")
+print("\nprecision_sweep OK")

@@ -1,0 +1,50 @@
+"""Quantization-aware training with the EULER-ADAS engine in the forward
+pass (STE gradients), plus fault-tolerant checkpoint/restart.
+
+  PYTHONPATH=src python examples/train_qat.py
+"""
+import os
+import tempfile
+
+import jax
+
+from repro.core.engine import from_variant
+from repro.data import SyntheticLM
+from repro.distributed import checkpoint as CK
+from repro.models.config import ModelConfig
+from repro.models.layers import Ctx
+from repro.models.transformer import Model
+from repro.optim import AdamW, cosine_schedule
+from repro.training import init_state, make_train_step
+
+CFG = ModelConfig(name="qat", family="dense", n_layers=2, d_model=128,
+                  n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
+                  loss_chunk=64, q_chunk=64, kv_chunk=64)
+
+ecfg = from_variant(16, "L-21b")          # the paper's headline config
+model = Model(CFG, ecfg)
+ctx = Ctx(ecfg=ecfg)
+opt = AdamW(lr=cosine_schedule(3e-3, 20, 200), weight_decay=0.0)
+state = init_state(model, opt, jax.random.PRNGKey(0))
+step = jax.jit(make_train_step(model, opt, ctx, grad_accum=2))
+data = SyntheticLM(vocab=CFG.vocab, seed=2)
+
+ckpt = tempfile.mkdtemp(prefix="euler_ckpt_")
+print(f"QAT under {ecfg.paper_name} ({ecfg.variant}); checkpoints -> {ckpt}")
+for i in range(100):
+    state, out = step(state, data.batch(i, 8, 128))
+    if (i + 1) % 40 == 0:
+        CK.save(ckpt, i + 1, state)
+    if i % 20 == 0:
+        print(f"  step {i:3d} loss {float(out['loss']):.4f}")
+
+# simulate a crash + restart: restore and replay deterministically
+state2, resume_step, _ = CK.restore(ckpt, state)
+print(f"restored at step {resume_step}; replaying to 100...")
+for i in range(resume_step, 100):
+    state2, out2 = step(state2, data.batch(i, 8, 128))
+import numpy as np
+same = all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in
+           zip(jax.tree.leaves(state.params), jax.tree.leaves(state2.params)))
+print(f"bit-identical replay after restart: {same}")
+print("train_qat OK")

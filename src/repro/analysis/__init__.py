@@ -1,0 +1,4 @@
+"""Static analysis: trip-aware jaxpr cost model + HLO collective parsing."""
+from . import costmodel
+
+__all__ = ["costmodel"]

@@ -1,0 +1,229 @@
+"""EULER-ADAS neural compute engine as a composable JAX module.
+
+``EulerConfig`` captures the paper's full knob set — posit width/es, regime
+bound R, ILM stage count n, truncation width m, SIMD mode — plus framework
+knobs (gradient handling, output quantization, accumulation strategy).
+
+``euler_dot_general`` is the drop-in replacement for ``lax.dot_general`` used
+by every matmul in the model zoo.  Modes:
+
+  "exact"       FP32 matmul (FP32 reference baseline)
+  "posit"       operands quantized to posit, exact multiply, f32 (quire-like)
+                accumulate — the paper's *exact radix-4 Booth posit NCE*
+                baseline (R4BM)
+  "euler"       the paper's engine: posit quantize + n-stage ILM with
+                truncation via the two-plane identity (see logmult.py)
+  "logfxp"      log-fixed-point baseline (Table VI "Log-fxp_n")
+  "quant_only"  posit quantization only (ablation: isolates format error
+                from multiplier error)
+
+Gradients: straight-through estimator — the forward pass sees the approximate
+value, the backward pass differentiates as the exact product of the
+*quantized* operands (rem-plane contributes zero gradient).  This is standard
+QAT practice and keeps training stable while the inference path is faithful.
+
+Named variants (paper Tables I/II): ``L-1, L-2, L-21, L-22`` and bounded
+``*b`` forms, per width:
+
+  width   L-1        L-2         L-21           L-22
+  8       n=2        n=3         n=3,m=4        n=3,m=5
+  16      n=4        n=6         n=6,m=8        n=6,m=10
+  32      n=8        n=12        n=12,m=16      n=12,m=20
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import logmult as LM
+from . import posit as P
+
+# (n_low, n_high, m_low, m_high) per width — Section II-B.3
+_KNOBS = {8: (2, 3, 4, 5), 16: (4, 6, 8, 10), 32: (8, 12, 16, 20)}
+_RBOUND = {8: 2, 16: 3, 32: 5}
+
+VARIANT_NAMES = ("L-1", "L-2", "L-21", "L-22", "L-1b", "L-2b", "L-21b", "L-22b")
+
+
+@dataclasses.dataclass(frozen=True)
+class EulerConfig:
+    """Full operating-point description of the EULER-ADAS NCE."""
+
+    width: int = 16                  # posit word width: 8 | 16 | 32
+    bounded: bool = True             # B-Posit regime bound (R per _RBOUND)
+    stages: int = 6                  # ILM stage count n
+    trunc: int | None = 10           # truncation width m (None = no truncation)
+    mode: str = "euler"              # exact|posit|euler|logfxp|quant_only
+    simd: str = "scalar"             # scalar | 8_16 | 8_16_32
+    out_quant: bool = False          # re-encode accumulator output to posit
+    accum: str = "f32"               # f32 | kahan (quire adaptation)
+    fuse_planes: bool = False        # beyond-paper: one concat-K dot instead
+                                     # of two (same FLOPs, one MXU pass, one
+                                     # output reduction) — see EXPERIMENTS §Perf
+    pre_scale: bool = True           # per-tensor power-of-2 scaling (a shift in
+                                     # HW; centers data in the posit-dense
+                                     # region — essential for bounded formats)
+    dtype: Any = jnp.float32
+
+    @property
+    def posit(self) -> P.PositConfig:
+        es = {8: 0, 16: 1, 32: 2}[self.width]
+        r = _RBOUND[self.width] if self.bounded else None
+        return P.PositConfig(self.width, es, r)
+
+    @property
+    def sublane(self) -> int | None:
+        """SIMD shared-datapath sub-lane width (models Table I SIMD rows)."""
+        if self.simd == "scalar" or self.width == 8:
+            return None
+        return 8  # both SIMD modes share an 8-bit sub-lane granularity
+
+    @property
+    def variant(self) -> str:
+        n_lo, n_hi, m_lo, m_hi = _KNOBS[self.width]
+        base = {(n_lo, None): "L-1", (n_hi, None): "L-2",
+                (n_hi, m_lo): "L-21", (n_hi, m_hi): "L-22"}.get(
+                    (self.stages, self.trunc), f"L-n{self.stages}m{self.trunc}")
+        return base + ("b" if self.bounded else "")
+
+    @property
+    def paper_name(self) -> str:
+        n_lo, n_hi, m_lo, m_hi = _KNOBS[self.width]
+        s = f"LP-{self.stages}"
+        if self.trunc is not None:
+            s += f"_T{self.trunc}"
+        if self.bounded:
+            s = f"b{_RBOUND[self.width]}_" + s
+        return s
+
+    def replace(self, **kw) -> "EulerConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def from_variant(width: int, variant: str, **kw) -> EulerConfig:
+    """Build an EulerConfig from a paper variant name like ``L-21b``."""
+    bounded = variant.endswith("b")
+    v = variant[:-1] if bounded else variant
+    n_lo, n_hi, m_lo, m_hi = _KNOBS[width]
+    table = {"L-1": (n_lo, None), "L-2": (n_hi, None),
+             "L-21": (n_hi, m_lo), "L-22": (n_hi, m_hi)}
+    if v not in table:
+        raise ValueError(f"unknown variant {variant}")
+    n, m = table[v]
+    return EulerConfig(width=width, bounded=bounded, stages=n, trunc=m, **kw)
+
+
+EXACT = EulerConfig(mode="exact")
+
+
+# --------------------------------------------------------------------------
+# Plane construction with straight-through gradients
+# --------------------------------------------------------------------------
+
+def _ste(approx, x):
+    """Forward ``approx``, backward identity w.r.t. ``x``."""
+    return x + jax.lax.stop_gradient(approx - x)
+
+
+def _pow2_scale(x):
+    """Per-tensor power-of-2 scale centering the log-magnitude mass at 1.
+
+    Hardware analog: a per-layer exponent bias (pure shift).  Power-of-2
+    scaling commutes with posit regime/exponent fields, so quantization error
+    statistics are those of the centered distribution — this is what makes the
+    narrow bounded-regime formats usable on real tensors.
+    """
+    ax = jnp.abs(x.astype(jnp.float32))
+    nz = ax > 0
+    lg = jnp.where(nz, jnp.log2(jnp.maximum(ax, 1e-38)), 0.0)
+    mean_lg = jnp.sum(lg) / jnp.maximum(jnp.sum(nz), 1)
+    s = jnp.exp2(jnp.round(mean_lg))
+    return jax.lax.stop_gradient(jnp.maximum(s, 1e-30))
+
+
+def operand_planes(x, cfg: EulerConfig):
+    """(val, rem) planes for one operand under ``cfg`` (STE gradients)."""
+    if cfg.mode == "exact":
+        return x.astype(cfg.dtype), None
+    if cfg.mode == "logfxp":
+        val, rem = LM.logfxp_planes(x.astype(jnp.float32), cfg.width, cfg.stages)
+        return _ste(val, x).astype(cfg.dtype), jax.lax.stop_gradient(rem).astype(cfg.dtype)
+    pc = cfg.posit
+    s = _pow2_scale(x) if cfg.pre_scale else jnp.float32(1.0)
+    xs = x.astype(jnp.float32) / s
+    if cfg.mode in ("posit", "quant_only"):
+        q = P.quantize(xs, pc) * s
+        return _ste(q, x).astype(cfg.dtype), None
+    if cfg.mode == "euler":
+        val, rem = LM.ilm_planes_from_float(
+            xs, pc, cfg.stages, cfg.trunc, cfg.sublane)
+        return (_ste(val * s, x).astype(cfg.dtype),
+                jax.lax.stop_gradient(rem * s).astype(cfg.dtype))
+    raise ValueError(f"unknown mode {cfg.mode}")
+
+
+def euler_dot_general(a, b, dimension_numbers, cfg: EulerConfig,
+                      precision=None, preferred_element_type=jnp.float32):
+    """Drop-in ``lax.dot_general`` under EULER-ADAS numerics.
+
+    Accumulation runs in f32 inside the dot (the quire adaptation); the
+    result is stored back at the operand compute dtype (bf16 on TPU) — the
+    standard accumulate-wide/store-narrow contract."""
+    va, ra = operand_planes(a, cfg)
+    vb, rb = operand_planes(b, cfg)
+    dot = lambda x, y: jax.lax.dot_general(
+        x, y, dimension_numbers, precision=precision,
+        preferred_element_type=preferred_element_type)
+    (lc, rc), _ = dimension_numbers
+    if (ra is not None and rb is not None and cfg.fuse_planes
+            and len(lc) == 1):
+        # ILM identity as ONE dot: [va | ra] · [vb | -rb] along K.
+        # Identical numerics (f32 accumulation is order-insensitive at the
+        # tile level), half the MXU passes / output reductions.
+        va2 = jnp.concatenate([va, ra], axis=lc[0])
+        vb2 = jnp.concatenate([vb, -rb], axis=rc[0])
+        out = dot(va2, vb2)
+    else:
+        out = dot(va, vb)
+        if ra is not None and rb is not None:
+            out = out - dot(ra, rb)
+    if cfg.out_quant and cfg.mode != "exact":
+        out = _ste(P.quantize(out.astype(jnp.float32), cfg.posit), out).astype(out.dtype)
+    return out.astype(jnp.promote_types(va.dtype, vb.dtype))
+
+
+def euler_matmul(a, b, cfg: EulerConfig):
+    """a @ b (contract last dim of a with first of b) under EULER numerics."""
+    nb = b.ndim
+    dn = (((a.ndim - 1,), (0,)), ((), ()))
+    del nb
+    return euler_dot_general(a, b, dn, cfg)
+
+
+def euler_einsum_qk(q, k, cfg: EulerConfig):
+    """attention scores q·k^T over the last dim: [..., T, D] x [..., S, D]."""
+    nd = q.ndim
+    batch = tuple(range(nd - 2))
+    dn = (((nd - 1,), (nd - 1,)), (batch, batch))
+    return euler_dot_general(q, k, dn, cfg)
+
+
+def euler_einsum_pv(p, v, cfg: EulerConfig):
+    """attention values p·v: [..., T, S] x [..., S, D]."""
+    nd = p.ndim
+    batch = tuple(range(nd - 2))
+    dn = (((nd - 1,), (nd - 2,)), (batch, batch))
+    return euler_dot_general(p, v, dn, cfg)
+
+
+def ilm_elementwise(a, b, cfg: EulerConfig):
+    """Elementwise EULER product (used by the SSD state update path)."""
+    va, ra = operand_planes(a, cfg)
+    vb, rb = operand_planes(b, cfg)
+    out = va * vb
+    if ra is not None and rb is not None:
+        out = out - ra * rb
+    return out

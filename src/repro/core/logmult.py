@@ -1,0 +1,154 @@
+"""Stage-adaptive iterative logarithmic multiplication (ILM) with truncation.
+
+The paper's mantissa multiplier is Babic-style ILM: Mitchell's log-domain
+approximation applied iteratively ``n`` times, plus operand truncation keeping
+``m`` bits after the leading one.  Error bounds (paper Eq. 8-9):
+
+    RE(n)    <  2^-2n
+    RE(n, m) <= 2^-2n + 2^-m
+
+TPU adaptation (the key identity used throughout this framework)
+----------------------------------------------------------------
+Let ``rem_n(X)`` be X with its top ``n`` set bits cleared.  The n-stage ILM
+telescopes exactly:
+
+    ILM_n(A, B) = A*B - rem_n(A) * rem_n(B)
+
+(each stage s adds ``A_s B_s - A_{s+1} B_{s+1}`` where ``A_{s+1}`` strips the
+leading set bit of ``A_s``).  Hence an ILM *matmul* is two exact matmuls on
+per-operand transformed planes:
+
+    sum_k ILM_n(A_k, B_k) = dot(A, B) - dot(rem_n(A), rem_n(B))
+
+which maps the paper's log-domain datapath directly onto the MXU instead of
+emulating a GPU/ASIC elementwise pipeline.  The Pallas kernel fuses decode +
+plane construction + both dots per VMEM tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import posit as P
+
+
+def clear_top_set_bits(x, k: int):
+    """Clear the top ``k`` set bits of uint32 ``x`` (vectorized, static k)."""
+    x = jnp.asarray(x, jnp.uint32)
+    for _ in range(k):
+        nz = x != 0
+        pos = jnp.uint32(31) - jax.lax.clz(jnp.where(nz, x, jnp.uint32(1))).astype(jnp.uint32)
+        x = jnp.where(nz, x & ~(jnp.uint32(1) << pos), x)
+    return x
+
+
+def truncate_mantissa(frac, W: int, m: int | None):
+    """Keep only the top ``m`` fraction bits below the leading (implicit) one."""
+    if m is None or m >= W:
+        return jnp.asarray(frac, jnp.uint32)
+    drop = W - m
+    return (jnp.asarray(frac, jnp.uint32) >> drop) << drop
+
+
+def ilm_planes_from_fields(sign, scale, frac, is_zero, W: int, n: int,
+                           m: int | None, sublane: int | None = None,
+                           dtype=jnp.float32):
+    """Build the (val, rem) float planes realizing the ILM identity.
+
+    Args:
+      sign/scale/frac/is_zero: decoded posit fields (see posit.decode_fields).
+      W: fraction window width.  n: ILM stages.  m: truncation width.
+      sublane: SIMD sub-lane width in bits; models the shared-datapath error
+        of SIMD modes as an additional operand truncation at the sub-lane
+        boundary (see DESIGN.md §2 / Table I SIMD rows).
+    Returns:
+      (val, rem): val is the decoded (truncated) operand value; rem is the
+      operand with the top n set bits of its mantissa cleared, scaled
+      identically.  ILM product of a pair (a, b) = va*vb - ra*rb.
+    """
+    m_eff = m
+    if sublane is not None:
+        m_eff = min(m, sublane - 1) if m is not None else sublane - 1
+    frac_t = truncate_mantissa(frac, W, m_eff)
+    mant = (jnp.uint32(1) << W) | frac_t
+    # stage 1 strips the implicit leading one; stages 2..n strip frac bits
+    rem_mant = clear_top_set_bits(mant, n)
+    sgn = jnp.where(sign == 1, -1.0, 1.0).astype(dtype)
+    unit = jnp.ldexp(sgn, scale - W)  # (-1)^s * 2^(scale - W)
+    val = unit * mant.astype(dtype)
+    rem = unit * rem_mant.astype(dtype)
+    val = jnp.where(is_zero, 0.0, val).astype(dtype)
+    rem = jnp.where(is_zero, 0.0, rem).astype(dtype)
+    return val, rem
+
+
+def ilm_planes_from_float(x, cfg: P.PositConfig, n: int, m: int | None,
+                          sublane: int | None = None, dtype=jnp.float32):
+    """Quantize float tensor to posit ``cfg`` and build ILM planes."""
+    pat = P.encode_from_float(x, cfg)
+    f = P.decode_fields(pat, cfg)
+    return ilm_planes_from_fields(f["sign"], f["scale"], f["frac"],
+                                  f["is_zero"] | f["is_nar"],
+                                  cfg.frac_window, n, m, sublane, dtype)
+
+
+def ilm_pair(a, b, cfg: P.PositConfig, n: int, m: int | None,
+             sublane: int | None = None):
+    """Elementwise ILM product of two float tensors through posit ``cfg``."""
+    va, ra = ilm_planes_from_float(a, cfg, n, m, sublane)
+    vb, rb = ilm_planes_from_float(b, cfg, n, m, sublane)
+    return va * vb - ra * rb
+
+
+# --------------------------------------------------------------------------
+# Log-fixed-point baseline (paper Table VI "Log-fxp_n" rows)
+# --------------------------------------------------------------------------
+
+def fxp_quantize(x, bits: int, frac_bits: int | None = None):
+    """Symmetric fixed-point quantization with per-tensor power-of-2 scale."""
+    if frac_bits is None:
+        amax = jnp.max(jnp.abs(x)) + 1e-30
+        frac_exp = (bits - 2) - jnp.ceil(jnp.log2(amax)).astype(jnp.int32)
+    else:
+        frac_exp = frac_bits
+    scale = jnp.exp2(frac_exp.astype(jnp.float32))
+    q = jnp.clip(jnp.round(x * scale), -(2 ** (bits - 1) - 1), 2 ** (bits - 1) - 1)
+    return q / scale, q.astype(jnp.int32), scale
+
+
+def logfxp_planes(x, bits: int, n: int):
+    """ILM planes for the log-fixed-point baseline multiplier."""
+    xq, q, scale = fxp_quantize(x, bits)
+    mag = jnp.abs(q).astype(jnp.uint32)
+    rem_mag = clear_top_set_bits(mag, n)
+    sgn = jnp.sign(q).astype(jnp.float32)
+    val = sgn * mag.astype(jnp.float32) / scale
+    rem = sgn * rem_mag.astype(jnp.float32) / scale
+    return val, rem
+
+
+# --------------------------------------------------------------------------
+# Bit-exact numpy oracle of the literal per-stage ILM (for tests)
+# --------------------------------------------------------------------------
+
+def np_ilm_exact(A: int, B: int, n: int) -> int:
+    """Literal n-stage iterative logarithmic multiplier on integers."""
+    A, B, out = int(A), int(B), 0
+    for _ in range(n):
+        if A == 0 or B == 0:
+            break
+        ka, kb = A.bit_length() - 1, B.bit_length() - 1
+        ra, rb = A - (1 << ka), B - (1 << kb)
+        out += (1 << (ka + kb)) + (ra << kb) + (rb << ka)
+        A, B = ra, rb
+    return out
+
+
+def np_clear_top_set_bits(x: int, k: int) -> int:
+    x = int(x)
+    for _ in range(k):
+        if x == 0:
+            break
+        x &= ~(1 << (x.bit_length() - 1))
+    return x

@@ -1,0 +1,27 @@
+"""Arithmetic error metrics of the paper (Section IV-A).
+
+All metrics compare an approximate product tensor against the exact product:
+  MSE  = mean((approx - exact)^2)
+  MAE  = mean(|approx - exact|)
+  NMED = mean(|approx - exact|) / max(|exact|)      (normalized mean error distance)
+  MRED = mean(|approx - exact| / |exact|)           (mean relative error distance)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def error_metrics(approx, exact):
+    approx = jnp.asarray(approx, jnp.float32)
+    exact = jnp.asarray(exact, jnp.float32)
+    err = approx - exact
+    abs_err = jnp.abs(err)
+    denom = jnp.maximum(jnp.max(jnp.abs(exact)), 1e-30)
+    nz = jnp.abs(exact) > 1e-30
+    red = jnp.where(nz, abs_err / jnp.maximum(jnp.abs(exact), 1e-30), 0.0)
+    return dict(
+        mse=jnp.mean(err * err),
+        mae=jnp.mean(abs_err),
+        nmed=jnp.mean(abs_err) / denom,
+        mred=jnp.sum(red) / jnp.maximum(jnp.sum(nz), 1),
+    )

@@ -1,0 +1,362 @@
+"""Bit-accurate Posit / Bounded-Posit (B-Posit) codec, vectorized in JAX.
+
+Implements Posit-2022 style ``Posit(N, es)`` plus the bounded-regime variant
+``bPosit(N, es, R)`` of EULER-ADAS (regime field capped at R bits; runs of
+length R carry no terminator bit).
+
+Representation notes
+--------------------
+* Patterns are manipulated as ``uint32`` regardless of word size; storage
+  dtypes are uint8/uint16/uint32.
+* Negative posits are the two's complement of the whole word.
+* ``body`` denotes the low N-1 bits of the non-negative pattern.
+* Decode exposes integer fields ``(sign, scale, frac, W)`` with a *fixed*
+  fraction window ``W = N - 1 - es`` (trailing zeros shifted in, matching the
+  zero-padding semantics of the posit standard), so that
+  ``value = (-1)^sign * 2^(scale - W) * (2^W + frac)``.
+* Encode performs pattern-domain round-to-nearest-even — the same rounding a
+  hardware encoder (incl. the paper's RTL) performs: regime/exponent/fraction
+  are concatenated at the working regime width and rounded as one bit string;
+  a carry out of the fraction naturally produces the correct neighbouring
+  pattern.  Saturation: no rounding to zero (clamp to minpos) and no overflow
+  past maxpos.
+* Special values: 0 -> pattern 0; NaN/Inf -> NaR (sign bit only). NaR decodes
+  to NaN. Subnormal-free by construction (posits have no subnormals); DAZ/FTZ
+  is applied on encode for values below minpos/2 ULP handling via the minpos
+  clamp, matching the paper's exact control path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_GUARD = 26  # guard bits carried through encode; exact for float32 inputs
+
+
+@dataclasses.dataclass(frozen=True)
+class PositConfig:
+    """Static description of a (bounded) posit format."""
+
+    n_bits: int
+    es: int
+    regime_max: int | None = None  # None => standard posit
+
+    def __post_init__(self):
+        if self.n_bits not in (8, 16, 32):
+            raise ValueError(f"unsupported posit width {self.n_bits}")
+        if self.regime_max is not None and not (1 <= self.regime_max <= self.n_bits - 1):
+            raise ValueError("regime bound out of range")
+
+    # ----- derived constants (all Python ints; safe inside jit) -----
+    @property
+    def bounded(self) -> bool:
+        return self.regime_max is not None
+
+    @property
+    def rcap(self) -> int:
+        """Maximum regime *run length*."""
+        return self.regime_max if self.bounded else self.n_bits - 1
+
+    @property
+    def k_max(self) -> int:
+        return (self.regime_max - 1) if self.bounded else self.n_bits - 2
+
+    @property
+    def k_min(self) -> int:
+        return -self.regime_max if self.bounded else -(self.n_bits - 2)
+
+    @property
+    def frac_window(self) -> int:
+        """Fixed decode fraction window W."""
+        return self.n_bits - 1 - self.es
+
+    @property
+    def body_bits(self) -> int:
+        return self.n_bits - 1
+
+    @property
+    def max_scale(self) -> int:
+        if self.bounded:
+            return self.k_max * (1 << self.es) + (1 << self.es) - 1
+        return self.k_max * (1 << self.es)
+
+    @property
+    def min_scale(self) -> int:
+        if self.bounded:
+            return self.k_min * (1 << self.es)
+        return self.k_min * (1 << self.es)
+
+    @property
+    def storage_dtype(self):
+        return {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}[self.n_bits]
+
+    @property
+    def name(self) -> str:
+        b = f",R{self.regime_max}" if self.bounded else ""
+        return f"posit({self.n_bits},{self.es}{b})"
+
+
+# The paper's operating points (Section II-B.3).
+POSIT8 = PositConfig(8, 0)
+POSIT16 = PositConfig(16, 1)
+POSIT32 = PositConfig(32, 2)
+BPOSIT8 = PositConfig(8, 0, 2)
+BPOSIT16 = PositConfig(16, 1, 3)
+BPOSIT32 = PositConfig(32, 2, 5)
+
+BY_WIDTH = {8: (POSIT8, BPOSIT8), 16: (POSIT16, BPOSIT16), 32: (POSIT32, BPOSIT32)}
+
+
+def _mask(nbits: int) -> np.uint32:
+    return np.uint32((1 << nbits) - 1) if nbits < 32 else np.uint32(0xFFFFFFFF)
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def decode_fields(bits, cfg: PositConfig):
+    """Decode posit patterns to integer fields.
+
+    Args:
+      bits: integer array of patterns (any int dtype; low ``n_bits`` used).
+    Returns:
+      dict with ``sign`` (uint32 0/1), ``scale`` (int32), ``frac`` (uint32 in
+      a fixed ``W``-bit window), ``is_zero``, ``is_nar`` (bool).
+    """
+    N = cfg.n_bits
+    p = jnp.asarray(bits).astype(jnp.uint32) & _mask(N)
+    sign = (p >> (N - 1)) & jnp.uint32(1)
+    body_pos = p & _mask(N - 1)
+    # two's complement of the full word for negatives
+    neg = (jnp.uint32(0) - p) & _mask(N)
+    body = jnp.where(sign == 1, neg & _mask(N - 1), body_pos)
+
+    is_zero = (p & _mask(N)) == 0
+    is_nar = p == jnp.uint32(1 << (N - 1))
+
+    # --- regime ---
+    u = (body << (32 - (N - 1))).astype(jnp.uint32)  # body left-aligned in 32b
+    r0 = (body >> (N - 2)) & jnp.uint32(1)
+    w = jnp.where(r0 == 1, ~u, u)
+    run = jax.lax.clz(w.astype(jnp.uint32)).astype(jnp.int32)
+    run = jnp.minimum(run, N - 1)
+    rcap = cfg.rcap
+    saturated = run >= rcap
+    run_eff = jnp.minimum(run, rcap)
+    regime_width = jnp.where(saturated, rcap, run_eff + 1)
+    k = jnp.where(r0 == 1, run_eff - 1, -run_eff)
+
+    # --- exponent + fraction ---
+    W = cfg.frac_window
+    rem = (body << regime_width.astype(jnp.uint32)) & _mask(N - 1)
+    if cfg.es > 0:
+        e = (rem >> (N - 1 - cfg.es)).astype(jnp.int32)
+        frac = rem & _mask(N - 1 - cfg.es)
+    else:
+        e = jnp.zeros_like(k)
+        frac = rem
+    scale = k * (1 << cfg.es) + e
+    scale = jnp.where(is_zero | is_nar, 0, scale)
+    frac = jnp.where(is_zero | is_nar, jnp.uint32(0), frac)
+    return dict(sign=sign, scale=scale.astype(jnp.int32), frac=frac.astype(jnp.uint32),
+                is_zero=is_zero, is_nar=is_nar, frac_window=W)
+
+
+def decode_to_float(bits, cfg: PositConfig, dtype=jnp.float32):
+    """Decode posit patterns to floats (NaR -> NaN, 0 -> 0)."""
+    f = decode_fields(bits, cfg)
+    W = cfg.frac_window
+    mant = jnp.asarray(1.0, dtype) + f["frac"].astype(dtype) * jnp.asarray(2.0 ** -W, dtype)
+    val = jnp.ldexp(mant, f["scale"])
+    val = jnp.where(f["sign"] == 1, -val, val)
+    val = jnp.where(f["is_zero"], jnp.zeros_like(val), val)
+    val = jnp.where(f["is_nar"], jnp.full_like(val, jnp.nan), val)
+    return val.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Encode
+# --------------------------------------------------------------------------
+
+def _rne_shift(v, sh):
+    """Round-to-nearest-even right shift of uint32 ``v`` by ``sh`` bits."""
+    sh_u = jnp.clip(sh, 1, 31).astype(jnp.uint32)
+    half = (jnp.uint32(1) << (sh_u - 1)) - 1
+    lsb = (v >> sh_u) & jnp.uint32(1)
+    out = (v + half + lsb) >> sh_u
+    return jnp.where(sh <= 0, v, out)
+
+
+def encode_from_float(x, cfg: PositConfig):
+    """Encode float array to posit patterns (uint32, low n_bits valid)."""
+    N, es, G = cfg.n_bits, cfg.es, _GUARD
+    xf = jnp.asarray(x, jnp.float32)
+    sign = jnp.signbit(xf)
+    a = jnp.abs(xf)
+    finite = jnp.isfinite(xf)
+    is_zero = a == 0
+    is_nar = ~finite
+
+    m, ex = jnp.frexp(jnp.where(is_zero | is_nar, 1.0, a))  # a = m * 2^ex, m in [.5,1)
+    scale = ex.astype(jnp.int32) - 1
+    mant = m * 2.0  # [1, 2)
+
+    # Saturate scale into representable range before field assembly.
+    over = scale > cfg.max_scale
+    under = scale < cfg.min_scale
+    scale_c = jnp.clip(scale, cfg.min_scale, cfg.max_scale)
+    mant = jnp.where(over | under, 1.0, mant)
+
+    k = scale_c >> es  # arithmetic shift = floor division
+    e = (scale_c - (k << es)).astype(jnp.int32)
+
+    # regime field bits + width
+    kmax, kmin, rcap = cfg.k_max, cfg.k_min, cfg.rcap
+    pos = k >= 0
+    at_hi = k == kmax
+    at_lo = k == kmin
+    # width
+    if cfg.bounded:
+        w_pos = jnp.where(at_hi, rcap, k + 2)
+        w_neg = jnp.where(at_lo, rcap, -k + 1)
+    else:
+        w_pos = jnp.where(at_hi, N - 1, k + 2)
+        w_neg = -k + 1  # k_min = -(N-2) -> width N-1 with terminator, formula holds
+    w = jnp.where(pos, w_pos, w_neg).astype(jnp.int32)
+
+    one = jnp.uint32(1)
+    rb_pos = jnp.where(
+        at_hi,
+        (one << jnp.uint32(rcap if cfg.bounded else N - 1)) - 1,
+        ((one << (k.clip(0) + 1).astype(jnp.uint32)) - 1) << 1,
+    )
+    if cfg.bounded:
+        rb_neg = jnp.where(at_lo, jnp.uint32(0), one)
+    else:
+        rb_neg = one
+    regime_bits = jnp.where(pos, rb_pos, rb_neg)
+
+    # tail = exponent + fraction at G guard bits, rounded into t payload bits
+    frac_g = jnp.round((mant - 1.0) * (2.0 ** G)).astype(jnp.uint32)  # exact for f32
+    T = (e.astype(jnp.uint32) << G) | frac_g
+    t = (N - 1) - w  # payload bits available
+    sh = es + G - t
+    T_r = _rne_shift(T, sh)
+    T_r = jnp.where(sh < 0, T << (-sh).astype(jnp.uint32), T_r)
+
+    body = (regime_bits << t.clip(0).astype(jnp.uint32)) + T_r
+    # saturation in pattern domain: never 0 (minpos) and never past maxpos
+    maxbody = _mask(N - 1)
+    body = jnp.clip(body, 1, maxbody)
+    body = jnp.where(over, maxbody, body)
+    body = jnp.where(under, jnp.uint32(1), body)
+
+    pat = jnp.where(sign, (jnp.uint32(0) - body) & _mask(N), body)
+    pat = jnp.where(is_zero, jnp.uint32(0), pat)
+    pat = jnp.where(is_nar, jnp.uint32(1 << (N - 1)), pat)
+    return pat
+
+
+def quantize(x, cfg: PositConfig, dtype=jnp.float32):
+    """Round floats to the nearest posit value (roundtrip through the codec)."""
+    return decode_to_float(encode_from_float(x, cfg), cfg, dtype)
+
+
+def to_storage(pat, cfg: PositConfig):
+    return pat.astype(cfg.storage_dtype)
+
+
+def from_storage(arr, cfg: PositConfig):
+    return jnp.asarray(arr).astype(jnp.uint32) & _mask(cfg.n_bits)
+
+
+# --------------------------------------------------------------------------
+# Pure-numpy big-int reference codec (oracle for tests; exact for any width)
+# --------------------------------------------------------------------------
+
+def np_decode(pattern: int, cfg: PositConfig) -> float:
+    N, es = cfg.n_bits, cfg.es
+    p = int(pattern) & ((1 << N) - 1)
+    if p == 0:
+        return 0.0
+    if p == 1 << (N - 1):
+        return float("nan")
+    sign = p >> (N - 1)
+    body = ((1 << N) - p if sign else p) & ((1 << (N - 1)) - 1)
+    bits = [(body >> (N - 2 - i)) & 1 for i in range(N - 1)]
+    r0 = bits[0]
+    run = 0
+    for b in bits:
+        if b == r0 and run < cfg.rcap:
+            run += 1
+        else:
+            break
+    if run >= cfg.rcap:
+        rw, k = cfg.rcap, (cfg.rcap - 1 if r0 else -cfg.rcap)
+    else:
+        rw, k = run + 1, (run - 1 if r0 else -run)
+    rest = bits[rw:] + [0] * (es + 64)
+    e = 0
+    for i in range(es):
+        e = (e << 1) | rest[i]
+    W = N - 1 - es
+    frac = 0
+    for i in range(W):
+        frac = (frac << 1) | rest[es + i]
+    scale = k * (1 << es) + e
+    val = (1 + frac / (1 << W)) * (2.0 ** scale)
+    return -val if sign else val
+
+
+def np_encode(x: float, cfg: PositConfig) -> int:
+    """Exact reference encode using Python big ints (value-domain fields,
+    pattern-domain RNE like the JAX path)."""
+    import math
+
+    N, es = cfg.n_bits, cfg.es
+    if x == 0:
+        return 0
+    if not math.isfinite(x):
+        return 1 << (N - 1)
+    sign = x < 0
+    a = abs(x)
+    mant, ex = math.frexp(a)  # mant in [0.5, 1)
+    scale = ex - 1
+    mant *= 2.0
+    over, under = scale > cfg.max_scale, scale < cfg.min_scale
+    scale = min(max(scale, cfg.min_scale), cfg.max_scale)
+    if over or under:
+        mant = 1.0
+    k = scale >> es
+    e = scale - (k << es)
+    if cfg.bounded:
+        w = cfg.rcap if k in (cfg.k_max, cfg.k_min) else (k + 2 if k >= 0 else -k + 1)
+        if k >= 0:
+            rb = (1 << cfg.rcap) - 1 if k == cfg.k_max else (((1 << (k + 1)) - 1) << 1)
+        else:
+            rb = 0 if k == cfg.k_min else 1
+    else:
+        w = N - 1 if k == cfg.k_max else (k + 2 if k >= 0 else -k + 1)
+        rb = ((1 << (N - 1)) - 1) if k == cfg.k_max else ((((1 << (k + 1)) - 1) << 1) if k >= 0 else 1)
+    G = 56
+    frac_g = int(round((mant - 1.0) * (1 << G)))
+    T = (e << G) | frac_g
+    t = (N - 1) - w
+    sh = es + G - t
+    if sh > 0:
+        lsb = (T >> sh) & 1
+        T = (T + ((1 << (sh - 1)) - 1) + lsb) >> sh
+    elif sh < 0:
+        T <<= -sh
+    body = (rb << max(t, 0)) + T
+    body = min(max(body, 1), (1 << (N - 1)) - 1)
+    if over:
+        body = (1 << (N - 1)) - 1
+    if under:
+        body = 1
+    return ((1 << N) - body) & ((1 << N) - 1) if sign else body

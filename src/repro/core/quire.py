@@ -1,0 +1,72 @@
+"""Quire accumulation semantics and the TPU adaptation.
+
+The hardware accumulates aligned products into a shared 128-bit quire and
+rounds once (RNE) at the end.  On TPU the accumulator is an f32 VMEM tile;
+we provide (a) an exact big-int quire oracle for validation, (b) a Kahan
+compensated accumulation for long reductions, and (c) a chunked pairwise
+reduction that mirrors how the Pallas kernel accumulates K-tiles.
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import posit as P
+
+
+# --------------------------------------------------------------------------
+# Exact oracle (numpy / python ints)
+# --------------------------------------------------------------------------
+
+def np_quire_dot(pat_a, pat_b, cfg: P.PositConfig) -> Fraction:
+    """Exact sum of exact posit products — the ideal 128-bit quire result."""
+    total = Fraction(0)
+    for a, b in zip(np.asarray(pat_a).ravel(), np.asarray(pat_b).ravel()):
+        va = P.np_decode(int(a), cfg)
+        vb = P.np_decode(int(b), cfg)
+        if np.isnan(va) or np.isnan(vb):
+            continue
+        total += Fraction(va) * Fraction(vb)
+    return total
+
+
+def np_quire_round(total: Fraction, cfg: P.PositConfig) -> int:
+    """RNE the exact quire value into an output posit pattern."""
+    return P.np_encode(float(total), cfg)
+
+
+# --------------------------------------------------------------------------
+# TPU-side accumulation strategies
+# --------------------------------------------------------------------------
+
+def kahan_sum(x, axis: int = -1):
+    """Kahan-Neumaier compensated summation along ``axis`` (via scan).
+
+    Neumaier's variant also survives the |xi| > |s| cancellation case that
+    defeats classic Kahan — closer to the hardware quire's exactness."""
+    x = jnp.moveaxis(x, axis, 0)
+
+    def step(carry, xi):
+        s, c = carry
+        t = s + xi
+        big = jnp.abs(s) >= jnp.abs(xi)
+        c = c + jnp.where(big, (s - t) + xi, (xi - t) + s)
+        return (t, c), None
+
+    (s, c), _ = jax.lax.scan(
+        step, (jnp.zeros_like(x[0]), jnp.zeros_like(x[0])), x)
+    return s + c
+
+
+def chunked_sum(x, axis: int = -1, chunk: int = 256):
+    """Pairwise/chunked reduction — matches K-tiled kernel accumulation order."""
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    pad = (-n) % chunk
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    x = x.reshape(x.shape[:-1] + (-1, chunk))
+    return x.sum(-1).sum(-1)

@@ -1,0 +1,5 @@
+"""Distribution substrate: sharding rules, compressed collectives,
+fault-tolerant checkpointing, and failover policy."""
+from . import sharding, collectives, checkpoint, failover
+
+__all__ = ["sharding", "collectives", "checkpoint", "failover"]

@@ -1,0 +1,139 @@
+"""Communication-efficiency helpers for the slow cross-pod (DCN) axis.
+
+Two layers:
+
+1. ``compressed_psum`` — an int8 + per-chunk-scale all-reduce usable inside
+   ``shard_map``: quantize locally, sum int32 partials (exact), dequantize.
+   This is the wire-level primitive a real multi-pod deployment runs over
+   DCN; it is unit-tested on a host-device mesh in tests/test_distributed.py.
+
+2. ``ef_compress`` / error-feedback state — value-level int8 compression with
+   residual carry (1-bit-Adam-style EF).  ``training/train_step.py`` applies
+   it to the cross-pod portion of the gradient so the *numerics* of the
+   compressed all-reduce are faithfully modeled inside the pjit graph
+   (where XLA owns the actual collective).  The EF buffer lives in the train
+   state and is sharded like the gradients.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# int8 block quantization
+# --------------------------------------------------------------------------
+
+def int8_quantize(x, block: int = 2048):
+    """Symmetric per-block int8 quantization.  Returns (q, scales, meta)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), (x.shape, n)
+
+
+def int8_dequantize(q, scale, meta):
+    shape, n = meta
+    out = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return out.reshape(shape)
+
+
+def compression_ratio(x, block: int = 2048) -> float:
+    """Wire bytes of compressed vs f32 transfer (int8 payload + f32 scales)."""
+    n = int(jnp.size(x))
+    nb = -(-n // block)
+    return (n + 4 * nb) / (4 * n)
+
+
+# --------------------------------------------------------------------------
+# shard_map-level compressed all-reduce (the DCN wire primitive)
+# --------------------------------------------------------------------------
+
+def compressed_psum(x, axis_name: str, block: int = 2048):
+    """All-reduce ``x`` over ``axis_name`` in int8.
+
+    Each participant quantizes its shard; int8 payloads are summed exactly in
+    int32 (no overflow for <= 2^23 participants); a shared max-scale is used
+    so the sum is decodable.  Mean is taken by the caller if desired.
+    """
+    q, scale, meta = int8_quantize(x, block)
+    # agree on a common scale (max over participants) so sums line up
+    scale_max = jax.lax.pmax(scale, axis_name)
+    requant = jnp.clip(
+        jnp.round(q.astype(jnp.float32) * (scale / scale_max)), -127, 127
+    ).astype(jnp.int32)
+    total = jax.lax.psum(requant, axis_name)
+    return int8_dequantize(total.astype(jnp.int32), scale_max, meta)
+
+
+def compressed_pmean(x, axis_name: str, block: int = 2048):
+    n = jax.lax.psum(1, axis_name)
+    return compressed_psum(x, axis_name, block) / n
+
+
+# --------------------------------------------------------------------------
+# Error-feedback compression (value level, inside pjit)
+# --------------------------------------------------------------------------
+
+def ef_init(grads):
+    """Zero residual buffer matching the gradient tree."""
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def ef_compress(grads, ef, block: int = 2048):
+    """Apply int8 quantization with error feedback to a gradient tree.
+
+    Returns (compressed_grads, new_ef).  The quantization models exactly the
+    numerics the cross-pod wire format introduces; the residual (what int8
+    couldn't represent) is carried to the next step — the standard EF trick
+    that restores convergence under biased compression.
+    """
+    def one(g, e):
+        tot = g + e
+        q, s, meta = int8_quantize(tot, block)
+        deq = int8_dequantize(q, s, meta)
+        return deq, tot - deq
+
+    flat = jax.tree.map(one, grads, ef,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    comp = jax.tree.map(lambda t: t[0], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_ef
+
+
+# --------------------------------------------------------------------------
+# Overlap helper: chunked all-reduce schedule (compute/comm overlap model)
+# --------------------------------------------------------------------------
+
+def bucketed(tree, bucket_bytes: int = 64 << 20):
+    """Group leaves into buckets of ~bucket_bytes for pipelined reduction.
+
+    Returns a list of lists of tree paths.  The launcher uses this to issue
+    gradient all-reduces layer-by-layer as the backward pass produces them
+    (XLA latency-hiding scheduler does the actual overlap; the bucket plan
+    bounds each collective's size so it can interleave)."""
+    paths = []
+    sizes = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(path)
+        sizes.append(int(jnp.size(leaf)) * 4)
+    buckets, cur, cur_b = [], [], 0
+    for p, s in zip(paths, sizes):
+        cur.append(p)
+        cur_b += s
+        if cur_b >= bucket_bytes:
+            buckets.append(cur)
+            cur, cur_b = [], 0
+    if cur:
+        buckets.append(cur)
+    return buckets

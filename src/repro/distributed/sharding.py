@@ -1,0 +1,236 @@
+"""Sharding rules: parameter / optimizer / data / cache PartitionSpecs.
+
+Mesh layout (launch/mesh.py):  single-pod ``("data", "model")`` = (16, 16);
+multi-pod ``("pod", "data", "model")`` = (2, 16, 16).  The ``pod`` axis is
+pure data-parallel across slow (DCN) links — only the gradient all-reduce
+crosses it.
+
+Parameter rules (Megatron-style TP over ``model``):
+  * embed [V, d]            -> (model, None)         vocab-sharded
+  * attention wq/wk/wv      -> (None, model)         column (head) sharded
+  * attention wo            -> (model, None)          row sharded
+  * mlp wi/wg               -> (None, model); wo -> (model, None)
+  * MoE expert stacks [E, d, f] -> (model, None, opt-data)  — experts over
+    ``model`` (EP); with ``fsdp_experts`` the ``f`` dim additionally shards
+    over ``data`` (+``pod``), the ZeRO-3 trick that makes arctic-480b fit
+  * SSD in_proj (None, model) / out_proj (model, None); head-indexed scalars
+    (A_log, D, dt_bias) over model when divisible
+  * norms / biases / router -> replicated
+
+Stacked layers: the leading [L] dim of scanned parameter stacks is never
+sharded; rules apply to the trailing dims.
+
+Optimizer state mirrors the parameter specs, with a ZeRO-1 extension: the
+first *unsharded* dim of every >=2-D state additionally shards over ``data``
+when divisible, spreading m/v across the DP group.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _shape(leaf):
+    """Shape of an array OR ShapeDtypeStruct (eval_shape abstract trees)."""
+    return tuple(getattr(leaf, "shape", np.shape(leaf)))
+
+
+def _ndim(leaf):
+    return len(_shape(leaf))
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([axis_size(mesh, a) for a in ("pod", "data")]))
+
+
+# --------------------------------------------------------------------------
+# Parameter rules
+# --------------------------------------------------------------------------
+
+_COL = re.compile(r"(wq|wk|wv|wi|wg|in_proj)$")
+_ROW = re.compile(r"(wo|out_proj)$")
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return out
+
+
+def param_spec(path, leaf, mesh: Mesh, *, fsdp_experts: bool = False,
+               stacked: bool = True) -> P:
+    """PartitionSpec for one parameter leaf given its tree path."""
+    names = _path_names(path)
+    joined = "/".join(names)
+    ndim = _ndim(leaf)
+    shape = _shape(leaf)
+    msz = axis_size(mesh, "model")
+    in_layers = "layers" in names
+    lead = 1 if (stacked and in_layers) else 0  # scanned [L] dim
+
+    def spec(*tail):
+        full = (None,) * lead + tail
+        full = full + (None,) * (ndim - len(full))
+        # drop axes missing from the mesh, then assignments that don't divide
+        clean = []
+        for dim, ax in enumerate(full[:ndim]):
+            if ax is None:
+                clean.append(None)
+                continue
+            axes = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                         if a in mesh.axis_names)
+            if not axes:
+                clean.append(None)
+                continue
+            ax = axes if isinstance(ax, tuple) else axes[0]
+            sz = int(np.prod([axis_size(mesh, a) for a in axes]))
+            clean.append(ax if shape[dim] % sz == 0 else None)
+        return P(*clean)
+
+    if "embed" in names:
+        return spec("model", None)
+    if "moe" in names:
+        if names[-1] == "w" and ndim - lead == 3:  # [E, d, f] expert stack
+            if _ROW.search(names[-2] or ""):
+                pass
+            ed = "data" if fsdp_experts else None
+            if "wo" in names:
+                return spec("model", ("pod", "data") if fsdp_experts else None, None)
+            return spec("model", None, ("pod", "data") if fsdp_experts else None)
+        if "router" in names:
+            return spec(None)
+    # dense / attention / ssm projections: match the enclosing module name
+    for nm in reversed(names):
+        if _COL.search(nm):
+            return spec(None, "model")
+        if _ROW.search(nm):
+            return spec("model", None)
+    if names[-1] in ("A_log", "D", "dt_bias") and ndim - lead == 1:
+        return spec("model" if shape[lead] % msz == 0 else None)
+    return P(*((None,) * ndim))
+
+
+def params_shardings(params, mesh: Mesh, *, fsdp_experts: bool = False):
+    """NamedSharding tree for a parameter pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh, fsdp_experts=fsdp_experts)),
+        params)
+
+
+def params_pspecs(params, mesh: Mesh, *, fsdp_experts: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh,
+                                      fsdp_experts=fsdp_experts),
+        params)
+
+
+# --------------------------------------------------------------------------
+# Optimizer-state rules (ZeRO-1 extension)
+# --------------------------------------------------------------------------
+
+def opt_spec(pspec: P, shape, mesh: Mesh, zero1: bool = True) -> P:
+    """Optimizer-moment spec: parameter spec + shard first free dim on data."""
+    if not zero1 or len(shape) == 0:
+        return pspec
+    used = set()
+    for ax in pspec:
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            used.add(a)
+    if "data" in used:
+        return pspec
+    dsz = axis_size(mesh, "data")
+    tail = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, ax in enumerate(tail):
+        if ax is None and shape[i] % dsz == 0 and shape[i] >= dsz:
+            tail[i] = "data"
+            break
+    return P(*tail)
+
+
+def opt_shardings(params, mesh: Mesh, *, fsdp_experts: bool = False,
+                  zero1: bool = True):
+    def one(path, leaf):
+        ps = param_spec(path, leaf, mesh, fsdp_experts=fsdp_experts)
+        return NamedSharding(mesh, opt_spec(ps, _shape(leaf), mesh, zero1))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# --------------------------------------------------------------------------
+# Data / activation / cache rules
+# --------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1, batch_size: int | None = None) -> P:
+    """[B, ...] inputs: batch over (pod, data) when divisible."""
+    da = data_axes(mesh)
+    if da and batch_size is not None:
+        dsz = int(np.prod([axis_size(mesh, a) for a in da]))
+        if batch_size % dsz != 0:
+            da = ()
+    return P(da if da else None, *([None] * extra_dims))
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    def one(leaf):
+        shp = _shape(leaf)
+        return NamedSharding(mesh, batch_spec(mesh, len(shp) - 1,
+                                              shp[0] if shp else None))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_spec(mesh: Mesh, shape, batch_dim: int = 1, seq_dim: int = 2,
+               kv_dim: int | None = 3) -> P:
+    """Stacked [L, B, S, KV, hd] KV cache (or [L, B, ...] state).
+
+    Preference order: shard B over (pod, data) when divisible; shard KV over
+    model when divisible; else shard S over model (the long-context
+    single-sample case); else replicate."""
+    nd = len(shape)
+    spec: list[Any] = [None] * nd
+    da = data_axes(mesh)
+    dsz = int(np.prod([axis_size(mesh, a) for a in da])) if da else 1
+    if da and shape[batch_dim] % dsz == 0 and shape[batch_dim] >= dsz:
+        spec[batch_dim] = da
+    msz = axis_size(mesh, "model")
+    if (kv_dim is not None and kv_dim < nd and shape[kv_dim] % msz == 0
+            and shape[kv_dim] >= msz):
+        spec[kv_dim] = "model"
+    elif seq_dim < nd and shape[seq_dim] % msz == 0 and shape[seq_dim] > msz:
+        spec[seq_dim] = "model"
+    return P(*spec)
+
+
+def cache_shardings(mesh: Mesh, cache_tree):
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = _shape(leaf)
+        if names[-1] in ("k", "v"):
+            return NamedSharding(mesh, cache_spec(mesh, shape))
+        if names[-1] == "state":  # [L, B, H, N, P]
+            return NamedSharding(mesh, cache_spec(mesh, shape, kv_dim=2,
+                                                  seq_dim=len(shape)))
+        return NamedSharding(mesh, cache_spec(mesh, shape, kv_dim=None,
+                                              seq_dim=len(shape)))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,179 @@
+"""Fused logarithmic-posit MAC matmul — the EULER-ADAS datapath as one kernel.
+
+One ``pl.pallas_call`` realizes the paper's six-stage pipeline per VMEM tile:
+
+  Stage 1  bounded-posit decode           (unrolled fixed-depth regime scan —
+                                           the TPU analogue of the paper's
+                                           bit-width-invariant decoder)
+  Stage 2  stage-adaptive ILM w/ trunc    (two-plane identity: val/rem)
+  Stage 3  exponent & regime scaling      (power-of-2 unit factors built by
+                                           exponent-field bit construction)
+  Stage 4  quire accumulation             (f32 VMEM accumulator tile,
+                                           revisited across the K grid dim)
+  Stage 5/6 rounding & result encoding    (separate codec kernel; the matmul
+                                           emits the f32 quire value)
+
+Inputs are posit *patterns* (uint32-carried), so HBM traffic is the posit
+word width — the memory-footprint advantage the paper argues for.
+
+Hardware notes:
+  * no ``clz``: leading-one detection uses the f32-exponent trick with a
+    one-step correction, safe for mantissas up to 2^30;
+  * MXU does the two dots per tile; VPU does decode — they overlap;
+  * grid = (M/bm, N/bn, K/bk), K innermost ("arbitrary"), accumulating into
+    the output block which is revisited for all k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.engine import EulerConfig
+
+
+def _u(x):
+    return jnp.asarray(x, jnp.uint32)
+
+
+def _mask(n: int):
+    return jnp.uint32((1 << n) - 1) if n < 32 else jnp.uint32(0xFFFFFFFF)
+
+
+def _exp2i(e):
+    """Exact 2^e for int32 e in [-126, 127], built from f32 exponent bits."""
+    bits = (jnp.clip(e, -126, 127) + 127).astype(jnp.uint32) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _pow2(e):
+    """Exact 2^e for |e| up to ~250 via two balanced factors."""
+    h1 = e // 2
+    h2 = e - h1
+    return _exp2i(h1) * _exp2i(h2)
+
+
+def _leading_one_pos(x):
+    """Floor(log2(x)) for uint32 x >= 1 (f32-exponent trick + correction)."""
+    xf = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(xf, jnp.uint32)
+    pos = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+    # conversion may round up to the next power of two; correct one step
+    over = ((x >> pos.clip(0, 31).astype(jnp.uint32)) & 1) == 0
+    return jnp.where(over, pos - 1, pos)
+
+
+def _clear_top_bits(x, k: int):
+    """Clear the top k set bits of uint32 x (unrolled, clz-free)."""
+    for _ in range(k):
+        nz = x > 0
+        pos = _leading_one_pos(jnp.where(nz, x, jnp.uint32(1)))
+        x = jnp.where(nz, x & ~(jnp.uint32(1) << pos.astype(jnp.uint32)), x)
+    return x
+
+
+def decode_planes_raw(pat, pc, stages: int, trunc: int | None,
+                      sublane: int | None):
+    """Posit patterns -> (val, rem) f32 ILM planes.  Pure jnp; runs inside the
+    kernel body and is also unit-tested directly against ref.ref_planes."""
+    N, es, W = pc.n_bits, pc.es, pc.frac_window
+    rcap = pc.rcap
+    p = _u(pat) & _mask(N)
+    sign = (p >> (N - 1)) & jnp.uint32(1)
+    body = jnp.where(sign == 1, (jnp.uint32(0) - p) & _mask(N - 1), p & _mask(N - 1))
+    is_special = (p & _mask(N)) == 0
+    is_special |= p == jnp.uint32(1 << (N - 1))
+
+    r0 = (body >> (N - 2)) & jnp.uint32(1)
+    # fixed-depth regime scan: rcap iterations (R for bounded — the paper's
+    # constant-depth decoder; N-1 for standard posit)
+    run = jnp.zeros(p.shape, jnp.int32)
+    cont = jnp.ones(p.shape, bool)
+    for j in range(rcap):
+        bit = (body >> jnp.uint32(N - 2 - j)) & jnp.uint32(1)
+        cont = cont & (bit == r0)
+        run = run + cont.astype(jnp.int32)
+    sat = run >= rcap
+    rw = jnp.where(sat, rcap, run + 1)
+    k = jnp.where(r0 == 1, run - 1, -run)
+
+    rem_bits = (body << rw.astype(jnp.uint32)) & _mask(N - 1)
+    if es > 0:
+        e = (rem_bits >> (N - 1 - es)).astype(jnp.int32)
+        frac = rem_bits & _mask(N - 1 - es)
+    else:
+        e = jnp.zeros_like(k)
+        frac = rem_bits
+    scale = k * (1 << es) + e
+
+    # operand truncation (m bits after the leading one; SIMD sub-lane cap)
+    m = trunc
+    if sublane is not None:
+        m = min(m, sublane - 1) if m is not None else sublane - 1
+    if m is not None and m < W:
+        drop = W - m
+        frac = (frac >> drop) << drop
+
+    mant = (jnp.uint32(1) << W) | frac
+    rem_mant = _clear_top_bits(mant, stages)
+
+    sgn = jnp.where(sign == 1, -1.0, 1.0)
+    unit = sgn * _pow2(scale - W)
+    val = unit * mant.astype(jnp.float32)
+    rem = unit * rem_mant.astype(jnp.float32)
+    val = jnp.where(is_special, 0.0, val)
+    rem = jnp.where(is_special, 0.0, rem)
+    return val.astype(jnp.float32), rem.astype(jnp.float32)
+
+
+def decode_planes(pat, ecfg: EulerConfig):
+    return decode_planes_raw(pat, ecfg.posit, ecfg.stages, ecfg.trunc,
+                             ecfg.sublane)
+
+
+def _logmac_kernel(a_ref, b_ref, o_ref, *, ecfg: EulerConfig, k_tiles: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    va, ra = decode_planes(a_ref[...], ecfg)
+    vb, rb = decode_planes(b_ref[...], ecfg)
+    acc = jnp.dot(va, vb, preferred_element_type=jnp.float32)
+    if ecfg.stages > 0 and ecfg.mode == "euler":
+        acc = acc - jnp.dot(ra, rb, preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg", "bm", "bn", "bk", "interpret"))
+def logmac(a_pat, b_pat, ecfg: EulerConfig, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = True):
+    """Fused EULER-ADAS matmul on posit patterns.
+
+    a_pat: (M, K) uint32 posit patterns, b_pat: (K, N).
+    Returns (M, N) f32 — the quire (f32-accumulated) ILM product.
+    """
+    M, K = a_pat.shape
+    K2, N = b_pat.shape
+    assert K == K2, (a_pat.shape, b_pat.shape)
+    # pad to tile multiples with the zero pattern (posit zero ⇒ contributes 0)
+    Mp, Np, Kp = (-M % bm), (-N % bn), (-K % bk)
+    if Mp or Kp:
+        a_pat = jnp.pad(a_pat, ((0, Mp), (0, Kp)))
+    if Kp or Np:
+        b_pat = jnp.pad(b_pat, ((0, Kp), (0, Np)))
+    Mt, Nt, Kt = a_pat.shape[0] // bm, b_pat.shape[1] // bn, a_pat.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_logmac_kernel, ecfg=ecfg, k_tiles=Kt),
+        grid=(Mt, Nt, Kt),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_pat.shape[0], b_pat.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(a_pat.astype(jnp.uint32), b_pat.astype(jnp.uint32))
+    return out[:M, :N]

@@ -1,0 +1,113 @@
+"""Posit encode/decode Pallas kernels (Stages 1 and 6 of the NCE pipeline).
+
+The encode kernel builds the pattern straight from f32 bit fields (no frexp),
+performing pattern-domain RNE exactly like the core codec.  Subnormal f32
+inputs are flushed to zero (the paper's DAZ/FTZ policy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import posit as P
+from .logmac import decode_planes_raw, _mask, _u
+
+_G = 26  # guard bits (>= 23 keeps f32 inputs exact)
+
+
+def encode_body(x, pc: P.PositConfig):
+    """f32 -> posit pattern, pure jnp bit ops (kernel-safe: no frexp)."""
+    N, es, G = pc.n_bits, pc.es, _G
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
+    sign = bits >> 31
+    expf = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)
+    frac23 = bits & _mask(23)
+    is_zero = (expf == 0)                      # zero and subnormals (DAZ)
+    is_nar = expf == 255                       # Inf/NaN -> NaR
+    scale = expf - 127
+
+    over = scale > pc.max_scale
+    under = scale < pc.min_scale
+    scale_c = jnp.clip(scale, pc.min_scale, pc.max_scale)
+    frac_g = jnp.where(over | under, jnp.uint32(0), frac23 << (G - 23))
+
+    k = scale_c >> es
+    e = (scale_c - (k << es)).astype(jnp.int32)
+    kmax, kmin, rcap = pc.k_max, pc.k_min, pc.rcap
+    pos = k >= 0
+    at_hi, at_lo = k == kmax, k == kmin
+    if pc.bounded:
+        w = jnp.where(pos, jnp.where(at_hi, rcap, k + 2),
+                      jnp.where(at_lo, rcap, -k + 1))
+        rb = jnp.where(pos,
+                       jnp.where(at_hi, _u((1 << rcap) - 1),
+                                 ((_u(1) << (k.clip(0) + 1).astype(jnp.uint32)) - 1) << 1),
+                       jnp.where(at_lo, _u(0), _u(1)))
+    else:
+        w = jnp.where(pos, jnp.where(at_hi, N - 1, k + 2), -k + 1)
+        rb = jnp.where(pos,
+                       jnp.where(at_hi, _mask(N - 1),
+                                 ((_u(1) << (k.clip(0) + 1).astype(jnp.uint32)) - 1) << 1),
+                       _u(1))
+    T = (e.astype(jnp.uint32) << G) | frac_g
+    t = (N - 1) - w
+    sh = es + G - t
+    sh_u = jnp.clip(sh, 1, 31).astype(jnp.uint32)
+    half = (_u(1) << (sh_u - 1)) - 1
+    lsb = (T >> sh_u) & _u(1)
+    T_r = jnp.where(sh > 0, (T + half + lsb) >> sh_u,
+                    T << jnp.clip(-sh, 0, 31).astype(jnp.uint32))
+    body = (rb << t.clip(0).astype(jnp.uint32)) + T_r
+    body = jnp.clip(body, 1, _mask(N - 1))
+    body = jnp.where(over, _mask(N - 1), body)
+    body = jnp.where(under, _u(1), body)
+    pat = jnp.where(sign == 1, (_u(0) - body) & _mask(N), body)
+    pat = jnp.where(is_zero, _u(0), pat)
+    pat = jnp.where(is_nar, _u(1 << (N - 1)), pat)
+    return pat
+
+
+def _encode_kernel(x_ref, o_ref, *, pc):
+    o_ref[...] = encode_body(x_ref[...], pc)
+
+
+def _decode_kernel(p_ref, o_ref, *, pc):
+    val, _ = decode_planes_raw(p_ref[...], pc, 0, None, None)
+    o_ref[...] = val
+
+
+def _tiled_elementwise(kernel, x, out_dtype, pc, block: int, interpret: bool):
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    rows = flat.shape[0] // block
+    flat = flat.reshape(rows, block)
+    out = pl.pallas_call(
+        functools.partial(kernel, pc=pc),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, block), out_dtype),
+        interpret=interpret,
+    )(flat)
+    return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("pc", "block", "interpret"))
+def posit_encode(x, pc: P.PositConfig, block: int = 1024, interpret: bool = True):
+    """f32 tensor -> posit patterns (uint32) via the encode kernel."""
+    return _tiled_elementwise(_encode_kernel, jnp.asarray(x, jnp.float32),
+                              jnp.uint32, pc, block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("pc", "block", "interpret"))
+def posit_decode(pat, pc: P.PositConfig, block: int = 1024, interpret: bool = True):
+    """posit patterns -> f32 tensor via the decode kernel."""
+    return _tiled_elementwise(_decode_kernel, jnp.asarray(pat, jnp.uint32),
+                              jnp.float32, pc, block, interpret)

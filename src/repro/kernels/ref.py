@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These re-use the bit-validated core library (repro.core.posit / logmult) so a
+kernel test reduces to ``assert_allclose(kernel(x), ref(x))``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import logmult as LM
+from repro.core import posit as P
+from repro.core.engine import EulerConfig
+
+
+def ref_decode(pat, cfg: P.PositConfig, dtype=jnp.float32):
+    """Oracle for the posit decode kernel."""
+    return P.decode_to_float(pat, cfg, dtype)
+
+
+def ref_encode(x, cfg: P.PositConfig):
+    """Oracle for the posit encode kernel."""
+    return P.encode_from_float(x, cfg)
+
+
+def ref_planes(pat, ecfg: EulerConfig):
+    """Oracle for in-kernel plane construction from patterns."""
+    pc = ecfg.posit
+    f = P.decode_fields(pat, pc)
+    return LM.ilm_planes_from_fields(
+        f["sign"], f["scale"], f["frac"], f["is_zero"] | f["is_nar"],
+        pc.frac_window, ecfg.stages, ecfg.trunc, ecfg.sublane)
+
+
+def ref_logmac(a_pat, b_pat, ecfg: EulerConfig):
+    """Oracle for the fused logarithmic-posit MAC matmul kernel.
+
+    a_pat: (M, K) posit patterns; b_pat: (K, N) posit patterns.
+    Returns f32 (M, N) = ILM-approximate product accumulated in f32 (the
+    quire adaptation), exactly the kernel's semantics.
+    """
+    va, ra = ref_planes(a_pat, ecfg)
+    vb, rb = ref_planes(b_pat, ecfg)
+    out = jnp.dot(va, vb, preferred_element_type=jnp.float32)
+    out = out - jnp.dot(ra, rb, preferred_element_type=jnp.float32)
+    return out
+
+
+def ref_exact_posit_mac(a_pat, b_pat, cfg: P.PositConfig):
+    """Oracle for the exact-posit (R4BM baseline) MAC matmul."""
+    va = P.decode_to_float(a_pat, cfg)
+    vb = P.decode_to_float(b_pat, cfg)
+    return jnp.dot(va, vb, preferred_element_type=jnp.float32)

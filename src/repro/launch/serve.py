@@ -1,0 +1,74 @@
+"""Serving driver: load (or init) a model and drain batched requests through
+the EULER-ADAS engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \\
+      --requests 12 --max-new 16 --euler L-21b
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs as C
+from repro.core.engine import EulerConfig, from_variant
+from repro.distributed import checkpoint as CK
+from repro.models.layers import Ctx
+from repro.models.transformer import Model
+from repro.serving import GenerationConfig, RequestBatcher, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--euler", default="L-21b")
+    ap.add_argument("--width", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mod = C.get_config(args.arch)
+    cfg = mod.SMOKE if args.smoke else mod.FULL
+    ecfg = (EulerConfig(mode="exact") if args.euler == "exact"
+            else from_variant(args.width, args.euler))
+    model = Model(cfg, ecfg, remat=False)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    if args.ckpt_dir:
+        from repro.training import TrainState
+        try:
+            state_like = {"params": params}
+            restored, step, _ = CK.restore(args.ckpt_dir, state_like)
+            params = restored["params"]
+            print(f"loaded params from step {step}")
+        except Exception as e:  # noqa: BLE001
+            print(f"no checkpoint loaded ({e}); serving random init")
+
+    ctx = Ctx(ecfg=ecfg)
+    eng = ServeEngine(model, params, ctx, max_len=args.max_len,
+                      batch=args.batch)
+    batcher = RequestBatcher(eng, prompt_buckets=(32, 128))
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        batcher.submit(rng.integers(0, cfg.vocab, plen), max_new=args.max_new)
+    results = batcher.run(GenerationConfig(max_new_tokens=args.max_new,
+                                           temperature=args.temperature))
+    dt = time.time() - t0
+    toks = sum(len(v) for v in results.values())
+    print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s) under {ecfg.variant}@posit{ecfg.width}")
+    for rid in sorted(results)[:4]:
+        print(f"  req {rid}: {results[rid][:8]}...")
+
+
+if __name__ == "__main__":
+    main()

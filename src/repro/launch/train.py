@@ -1,0 +1,127 @@
+"""Training driver: data pipeline -> train_step -> checkpoint/failover loop.
+
+Runs real steps on whatever devices exist (CPU here; the same code path jits
+under the production mesh via --mesh single|multi on a pod).  Demonstrates
+the full fault-tolerance loop: periodic checkpoints, heartbeat/straggler
+monitoring, crash-restart with deterministic replay.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \\
+      --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ck --euler L-21b
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as C
+from repro.configs import euler_nce
+from repro.core.engine import EulerConfig, from_variant
+from repro.data import SyntheticLM, batch_for_step
+from repro.distributed import checkpoint as CK
+from repro.distributed import failover as F
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models.layers import Ctx
+from repro.models.transformer import Model
+from repro.optim import AdamW, cosine_schedule
+from repro.training import init_state, make_train_step
+
+
+def build(args):
+    mod = C.get_config(args.arch)
+    cfg = mod.SMOKE if args.smoke else mod.FULL
+    if args.euler == "exact":
+        ecfg = EulerConfig(mode="exact")
+    else:
+        ecfg = from_variant(args.width, args.euler)
+    mesh = None
+    if args.mesh != "local":
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    model = Model(cfg, ecfg)
+    ctx = Ctx(ecfg=ecfg, mesh=mesh,
+              moe_fsdp=cfg.family == "moe" and cfg.n_experts >= 64)
+    opt = AdamW(lr=cosine_schedule(args.lr, args.warmup, args.steps),
+                weight_decay=0.01)
+    return model, cfg, ctx, opt, mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--euler", default="L-21b",
+                    help="variant name or 'exact'")
+    ap.add_argument("--width", type=int, default=16)
+    ap.add_argument("--mesh", choices=["local", "single", "multi"],
+                    default="local")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    model, cfg, ctx, opt, mesh = build(args)
+    data = SyntheticLM(vocab=cfg.vocab, seed=args.seed)
+    state = init_state(model, opt, jax.random.PRNGKey(args.seed),
+                       compress=args.compress_grads)
+    start = 0
+    if args.resume and args.ckpt_dir and CK.latest_step(args.ckpt_dir) is not None:
+        state, start, _ = CK.restore(args.ckpt_dir, state)
+        print(f"resumed from step {start}")
+
+    step_fn = make_train_step(model, opt, ctx, grad_accum=args.grad_accum,
+                              compress_grads=args.compress_grads)
+    if mesh is not None:
+        p_sh = SH.params_shardings(jax.eval_shape(model.init,
+                                                  jax.random.PRNGKey(0)), mesh)
+        state = jax.device_put(state, jax.tree.map(
+            lambda _: SH.replicated(mesh), state))  # simple placement; full
+        # production placement uses the dryrun shardings
+    step_fn = jax.jit(step_fn)
+
+    # single-host failover bookkeeping (the multi-host driver feeds beats
+    # from every worker; here we demonstrate the API end-to-end)
+    host = "host0"
+    mon = F.HeartbeatMonitor([host], dead_after_s=600)
+    det = F.StragglerDetector()
+    pol = F.FailoverPolicy()
+
+    emb_dim = cfg.d_model if cfg.embedding_inputs else None
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = batch_for_step(data, i, args.batch, args.seq,
+                               embeddings_dim=emb_dim)
+        state, out = step_fn(state, batch)
+        mon.beat(host, i)
+        decision = pol.decide(mon, det, i)
+        if decision.action != F.Action.CONTINUE:
+            print(f"[failover] {decision.action}: {decision.reason}")
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            CK.save(args.ckpt_dir, i + 1, state)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(out['loss']):.4f} "
+                  f"gnorm {float(out['grad_norm']):.3f} "
+                  f"lr {float(out['lr']):.2e} "
+                  f"({(time.time() - t0) / max(i - start + 1, 1):.2f}s/step)")
+    if args.ckpt_dir:
+        CK.save(args.ckpt_dir, args.steps, state)
+    print("done")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: composable decoder-only backbones (dense / MoE / SSM / hybrid)
+with EULER-ADAS numerics on every matmul."""
+from .config import ModelConfig
+from .transformer import Model
+
+__all__ = ["ModelConfig", "Model"]

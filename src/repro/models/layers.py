@@ -1,0 +1,469 @@
+"""Composable layers.  Every matmul routes through the EULER-ADAS engine.
+
+Functional style: ``*_init(key, ...) -> params dict`` and
+``*_apply(params, x, ctx) -> y``.  ``Ctx`` carries the EulerConfig, the mesh
+(for activation sharding constraints) and cache state for decoding.
+
+Exact-path policy (paper Stage 5: "approximation is confined to mantissa
+multiplication; normalization, rounding and exception handling remain
+exact"): norms, softmax, RoPE, router logits and elementwise nonlinearities
+run in exact f32; all large matmuls run through ``euler_dot_general``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.core import posit as _P
+from repro.core.engine import EulerConfig, euler_dot_general
+
+
+def cache_encode(x, cache_dtype):
+    """Write-side KV-cache codec: uint8 caches store Posit-(8,0) patterns —
+    the paper's posit memory-compression applied to the KV cache."""
+    if cache_dtype == jnp.uint8:
+        return _P.to_storage(_P.encode_from_float(x, _P.POSIT8), _P.POSIT8)
+    return x.astype(cache_dtype)
+
+
+def cache_decode(x, out_dtype=jnp.bfloat16):
+    if x.dtype == jnp.uint8:
+        return _P.decode_to_float(_P.from_storage(x, _P.POSIT8), _P.POSIT8,
+                                  out_dtype)
+    return x
+
+
+@dataclasses.dataclass
+class Ctx:
+    ecfg: EulerConfig
+    mesh: Any = None                 # jax Mesh or None
+    data_axes: tuple = ("pod", "data")
+    model_axis: str = "model"
+    decode_pos: Any = None           # scalar position when decoding
+    deterministic: bool = True
+    moe_fsdp: bool = False           # expert weights 2D-sharded (model, data)
+    attn_head_shard: bool = False    # shard q/k/v heads over model in
+                                     # prefill/train (kills the per-layer
+                                     # full-T k/v all-gather — §Perf)
+    moe_gather_dtype: Any = None     # cast expert weights before the ZeRO-3
+                                     # all-gather (bf16 halves wire bytes)
+
+    def shard(self, x, *spec):
+        if self.mesh is None:
+            return x
+        axes = set(self.mesh.axis_names)
+        clean = tuple(
+            (tuple(a for a in s if a in axes) or None) if isinstance(s, tuple)
+            else (s if (s is None or s in axes) else None)
+            for s in spec)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, PS(*clean)))
+
+    @property
+    def batch_spec(self):
+        return tuple(a for a in self.data_axes
+                     if self.mesh is not None and a in self.mesh.axis_names) or None
+
+
+def dot(a, b, ctx: Ctx, dn=None):
+    """EULER dot_general; default contracts a's last with b's first dim."""
+    if dn is None:
+        dn = (((a.ndim - 1,), (0,)), ((), ()))
+    return euler_dot_general(a, b, dn, ctx.ecfg)
+
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+
+
+def dense_apply(p, x, ctx: Ctx):
+    return dot(x, p["w"], ctx)
+
+
+def rmsnorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, -1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * p["g"]).astype(x.dtype)
+
+
+def embed_init(key, vocab_p: int, d: int):
+    return {"e": jax.random.normal(key, (vocab_p, d), jnp.float32) * 0.02}
+
+
+def embed_apply(p, ids):
+    return jnp.take(p["e"], ids, axis=0)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding on the last dim of x: [..., T, H, hd]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., T, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, optional sliding window, softcaps, chunked-flash softmax)
+# --------------------------------------------------------------------------
+
+def attention_init(key, cfg):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd),
+        "wk": dense_init(ks[1], d, KV * hd),
+        "wv": dense_init(ks[2], d, KV * hd),
+        "wo": dense_init(ks[3], H * hd, d),
+    }
+    if cfg.qk_norm:
+        p["qn"] = rmsnorm_init(cfg.head_dim)
+        p["kn"] = rmsnorm_init(cfg.head_dim)
+    return p
+
+
+def _attn_scores(q, k, ctx: Ctx, softcap):
+    # q: [B, T, H, hd], k: [B, S, KV, hd] (grouped) -> scores [B, H, T, S]
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    qg = q.reshape(B, T, KV, group, hd)
+    dn = (((4,), (3,)), ((0, 2), (0, 2)))  # contract hd; batch B, KV
+    s = euler_dot_general(qg, k, dn, ctx.ecfg)      # [B, KV, T, group, S]
+    s = s * (hd ** -0.5)
+    s = _softcap(s.astype(jnp.float32), softcap)
+    return s  # [B, KV, T, group, S]
+
+
+def _attn_values(p, v, ctx: Ctx):
+    # p: [B, KV, T, group, S], v: [B, S, KV, hd] -> [B, T, KV*group*hd]
+    dn = (((4,), (1,)), ((0, 1), (0, 2)))
+    o = euler_dot_general(p, v, dn, ctx.ecfg)       # [B, KV, T, group, hd]
+    B, KV, T, group, hd = o.shape
+    return jnp.moveaxis(o, 1, 2).reshape(B, T, KV * group * hd)
+
+
+def causal_window_mask(t_pos, s_pos, window):
+    """Causal + sliding-window mask.  ``window`` may be a *traced* int32
+    scalar: window < 0 means global (no window) — this is what lets a single
+    ``lax.scan`` over layers serve alternating local/global stacks."""
+    m = s_pos[None, :] <= t_pos[:, None]
+    if window is None:
+        return m
+    w = jnp.asarray(window, jnp.int32)
+    win_ok = (w < 0) | (s_pos[None, :] > (t_pos[:, None] - w))
+    return m & win_ok
+
+
+def _maybe_qk_norm(p, q, k):
+    if "qn" in p:
+        q = rmsnorm_apply(p["qn"], q)
+        k = rmsnorm_apply(p["kn"], k)
+    return q, k
+
+
+def attention_apply(p, x, ctx: Ctx, cfg, window, positions,
+                    cache=None, q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Full attention layer.
+
+    Modes (selected statically from shapes):
+      * cache is None            — training forward over x[B, T, d];
+      * cache given and T > 1    — prefill: flash attention + KV slab write;
+      * cache given and T == 1   — single-token decode at ctx.decode_pos.
+    ``window``: python int, None, or traced int32 scalar (<0 = global).
+    """
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    if ctx.attn_head_shard and ctx.mesh is not None and T > 1:
+        # Megatron SP entry: gather the sequence-sharded residual ONCE
+        # (activations, bf16) so GSPMD stops replicating the TP-sharded
+        # qkv WEIGHTS (f32, bigger) to resolve the T/model conflict.
+        x = ctx.shard(x, ctx.data_axes, None, None)
+
+    q = dense_apply(p["wq"], x, ctx).reshape(B, T, H, hd)
+    k = dense_apply(p["wk"], x, ctx).reshape(B, T, KV, hd)
+    v = dense_apply(p["wv"], x, ctx).reshape(B, T, KV, hd)
+    q, k = _maybe_qk_norm(p, q, k)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if ctx.attn_head_shard and ctx.mesh is not None and T > 1:
+        # Megatron attention: heads over `model`; each shard holds its heads
+        # for the FULL sequence, so flash needs no per-layer T all-gather.
+        msz = (ctx.mesh.shape[ctx.model_axis]
+               if ctx.model_axis in ctx.mesh.axis_names else 1)
+        if H % msz == 0 and KV % msz == 0:
+            q = ctx.shard(q, ctx.data_axes, None, ctx.model_axis, None)
+            k = ctx.shard(k, ctx.data_axes, None, ctx.model_axis, None)
+            v = ctx.shard(v, ctx.data_axes, None, ctx.model_axis, None)
+
+    if cache is not None and T == 1:
+        # ---- decode ----
+        ck, cv, pos = cache["k"], cache["v"], ctx.decode_pos
+        ck = jax.lax.dynamic_update_slice(ck, cache_encode(k, ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, cache_encode(v, cv.dtype),
+                                          (0, pos, 0, 0))
+        S = ck.shape[1]
+        s_pos = jnp.arange(S)
+        kd = cache_decode(ck, x.dtype)
+        vd = cache_decode(cv, x.dtype)
+        scores = _attn_scores(q, kd, ctx, cfg.attn_softcap)  # [B,KV,1,g,S]
+        valid = s_pos <= pos
+        if window is not None:
+            w = jnp.asarray(window, jnp.int32)
+            valid &= (w < 0) | (s_pos > pos - w)
+        scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(vd.dtype)
+        out = _attn_values(probs, vd, ctx)
+        y = dense_apply(p["wo"], out.astype(x.dtype), ctx)
+        return y, {"k": ck, "v": cv}
+
+    # ---- train / prefill: chunked (flash-style) causal attention ----
+    qc = min(q_chunk, T)
+    kc = min(kv_chunk, T)
+    assert T % qc == 0 and T % kc == 0
+    n_q, n_k = T // qc, T // kc
+    group = H // KV
+
+    def q_block(qi):
+        q_i = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, 1)
+        t_idx = jnp.arange(qc) + qi * qc
+
+        m0 = jnp.full((B, KV, qc, group), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, qc, group), jnp.float32)
+        a0 = jnp.zeros((B, KV, qc, group, hd), jnp.float32)
+
+        def step(carry, ki):
+            m_run, l_run, acc = carry
+            k_i = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, 1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, 1)
+            s = _attn_scores(q_i, k_i, ctx, cfg.attn_softcap)  # [B,KV,qc,g,kc]
+            s_idx = jnp.arange(kc) + ki * kc
+            mask = causal_window_mask(t_idx, s_idx, window)
+            s = jnp.where(mask[None, None, :, None, :], s, -1e30)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + pexp.sum(-1)
+            dn = (((4,), (1,)), ((0, 1), (0, 2)))
+            o = euler_dot_general(pexp.astype(v_i.dtype), v_i, dn, ctx.ecfg)
+            acc = acc * alpha[..., None] + o
+            return (m_new, l_new, acc), None
+
+        # remat each K/V step: backward recomputes the [.., qc, kc] score
+        # block instead of saving it — the flash-attention memory contract
+        step = jax.checkpoint(step, prevent_cse=False)
+        with jax.named_scope("attn_kv"):
+            (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                              jnp.arange(n_k))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)      # [B,KV,qc,g,hd]
+        return jnp.moveaxis(out, 2, 1).reshape(B, qc, H * hd)
+
+    outs = [q_block(i) for i in range(n_q)]
+    out = jnp.concatenate(outs, 1) if len(outs) > 1 else outs[0]
+    y = dense_apply(p["wo"], out.astype(x.dtype), ctx)
+
+    new_cache = None
+    if cache is not None:  # prefill: write the K/V slab at offset 0
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], cache_encode(k, cache["k"].dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], cache_encode(v, cache["v"].dtype), (0, 0, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+    return y, new_cache
+
+
+def attention_cache_init(cfg, batch: int, max_len: int, dtype=jnp.float32):
+    return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("silu_gated", "gelu_gated"):
+        return {"wi": dense_init(ks[0], d, f), "wg": dense_init(ks[1], d, f),
+                "wo": dense_init(ks[2], f, d)}
+    return {"wi": dense_init(ks[0], d, f), "wo": dense_init(ks[2], f, d)}
+
+
+def mlp_apply(p, x, ctx: Ctx, kind: str):
+    h = dense_apply(p["wi"], x, ctx)
+    if kind == "silu_gated":
+        h = jax.nn.silu(dense_apply(p["wg"], x, ctx)) * h
+    elif kind == "gelu_gated":
+        h = jax.nn.gelu(dense_apply(p["wg"], x, ctx), approximate=True) * h
+    elif kind == "relu2":  # squared ReLU (nemotron)
+        r = jax.nn.relu(h)
+        h = r * r
+    elif kind == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(kind)
+    return dense_apply(p["wo"], h, ctx)
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (top-k router, sort-free capacity dispatch, EP-shardable)
+# --------------------------------------------------------------------------
+
+def moe_init(key, cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, E, scale=0.02),
+        "wi": {"w": jax.random.normal(ks[1], (E, d, f), jnp.float32) * d ** -0.5},
+        "wg": {"w": jax.random.normal(ks[2], (E, d, f), jnp.float32) * d ** -0.5},
+        "wo": {"w": jax.random.normal(ks[3], (E, f, d), jnp.float32) * f ** -0.5},
+    }
+    if cfg.moe_dense_residual:
+        p["dense"] = mlp_init(ks[4], cfg)
+    return p
+
+
+def _moe_expert_block(xl, il, gl, wi, wg, wo, *, e0, E_local: int, cap: int,
+                      ecfg, gather_axes=None, gather_dtype=None):
+    """Per-device expert block: dispatch my tokens to MY experts, run the
+    expert FFN, combine back to token order.  Used both as the single-device
+    path (e0=0, E_local=E) and as the shard_map body (e0=axis_index*E_local,
+    partial output later psum'd over ``model``).
+
+    xl [n, d] local tokens; il/gl [n, k] router choices/gates;
+    wi/wg [E_local, d, f*]; wo [E_local, f*, d].  With ``gather_axes`` the
+    weights' f dim is ZeRO-3 storage-sharded and explicitly all-gathered
+    here (transient, per layer)."""
+    n, k = il.shape
+    d = xl.shape[-1]
+    flat_e = il.reshape(-1) - e0                               # local expert id
+    mine = (flat_e >= 0) & (flat_e < E_local)
+    safe_e = jnp.where(mine, flat_e, E_local)                  # junk bucket
+    onehot = jax.nn.one_hot(safe_e, E_local + 1, dtype=jnp.int32)
+    rank = (jnp.cumsum(onehot, 0) - 1)[jnp.arange(n * k), safe_e]
+    keep = mine & (rank < cap)
+    tok_idx = jnp.repeat(jnp.arange(n), k)
+    buf = jnp.zeros((E_local, cap, d), xl.dtype)
+    buf = buf.at[jnp.where(keep, flat_e, E_local - 1),
+                 jnp.where(keep, rank, cap - 1)].add(
+        jnp.where(keep[:, None], xl[tok_idx], 0.0).astype(xl.dtype))
+
+    if gather_axes:  # ZeRO-3: materialize my experts' full f dim, per layer
+        if gather_dtype is not None:
+            # cast BEFORE the gather so the wire carries bf16.  The barrier
+            # sits AFTER the gather: without it XLA hoists the codec's f32
+            # up-convert across the collective (merging it with this
+            # down-convert), silently re-widening the wire to f32.
+            wi = wi.astype(gather_dtype)
+            wg = wg.astype(gather_dtype)
+            wo = wo.astype(gather_dtype)
+        wi = jax.lax.all_gather(wi, gather_axes, axis=2, tiled=True)
+        wg = jax.lax.all_gather(wg, gather_axes, axis=2, tiled=True)
+        wo = jax.lax.all_gather(wo, gather_axes, axis=1, tiled=True)
+        if gather_dtype is not None:
+            wi, wg, wo = jax.lax.optimization_barrier((wi, wg, wo))
+
+    dnb = (((2,), (1,)), ((0,), (0,)))
+    h = euler_dot_general(buf, wi, dnb, ecfg)
+    g = euler_dot_general(buf, wg, dnb, ecfg)
+    h = jax.nn.silu(g) * h
+    out = euler_dot_general(h, wo, dnb, ecfg)                  # [E_l, cap, d]
+
+    gathered = out[jnp.where(keep, flat_e, 0), jnp.where(keep, rank, 0)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    y = jnp.zeros((n, d), gathered.dtype)
+    return y.at[tok_idx].add(gathered * gl.reshape(-1)[:, None])
+
+
+def moe_apply(p, x, ctx: Ctx, cfg):
+    """Top-k MoE, expert-parallel, explicit collective schedule:
+
+    One ``shard_map`` over the whole mesh runs dispatch -> expert FFN ->
+    combine per device: tokens stay sharded over (pod, data) with PER-DEVICE
+    capacity; each ``model`` shard handles its E/model experts and the partial
+    token outputs are psum'd over ``model``.  With ``ctx.moe_fsdp`` (arctic)
+    expert weights are additionally ZeRO-3 storage-sharded over data and
+    all-gathered transiently inside the block.  Token-space and expert-space
+    tensors never materialize globally."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    n_tok = B * T
+    xt = x.reshape(n_tok, d)
+
+    # router: exact f32 (small, accuracy-critical — paper's exact control path)
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]
+    gates, ids = jax.lax.top_k(jax.nn.softmax(logits, -1), k)   # [n, k]
+    gates = (gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+             ).astype(xt.dtype)
+
+    mesh = ctx.mesh
+    da = (tuple(a for a in ctx.data_axes if a in mesh.axis_names)
+          if mesh is not None else ())
+    dp = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+    msz = (mesh.shape[ctx.model_axis]
+           if mesh is not None and ctx.model_axis in mesh.axis_names else 1)
+    use_smap = (mesh is not None and (dp > 1 or msz > 1)
+                and n_tok % dp == 0 and E % msz == 0)
+    cap = int(max(1, round(n_tok / dp * k / E * cfg.capacity_factor)))
+
+    if use_smap:
+        from jax.sharding import PartitionSpec as _P
+        E_local = E // msz
+        fsdp = ctx.moe_fsdp and dp > 1
+        ma = ctx.model_axis
+
+        def body(xl, il, gl, wi, wg, wo):
+            e0 = (jax.lax.axis_index(ma) * E_local) if msz > 1 else 0
+            y = _moe_expert_block(
+                xl, il, gl, wi, wg, wo, e0=e0, E_local=E_local, cap=cap,
+                ecfg=ctx.ecfg, gather_axes=da if fsdp else None,
+                gather_dtype=ctx.moe_gather_dtype)
+            if msz > 1:
+                y = jax.lax.psum(y, ma)
+            return y
+
+        f_sh = da if fsdp else None
+        y = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(_P(da or None, None), _P(da or None, None),
+                      _P(da or None, None),
+                      _P(ma, None, f_sh), _P(ma, None, f_sh),
+                      _P(ma, f_sh, None)),
+            out_specs=_P(da or None, None), check_vma=False,
+        )(xt, ids, gates, p["wi"]["w"], p["wg"]["w"], p["wo"]["w"])
+    else:
+        y = _moe_expert_block(xt, ids, gates, p["wi"]["w"], p["wg"]["w"],
+                              p["wo"]["w"], e0=0, E_local=E, cap=cap,
+                              ecfg=ctx.ecfg)
+
+    if cfg.moe_dense_residual:
+        y = y + mlp_apply(p["dense"], xt, ctx, "silu_gated")
+    # router aux loss (load balancing, Switch-style)
+    me = jnp.mean(jax.nn.softmax(logits, -1), 0)
+    ce = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), 0)
+    aux = E * jnp.sum(me * ce)
+    return y.astype(x.dtype).reshape(B, T, d), aux

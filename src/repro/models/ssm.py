@@ -1,0 +1,206 @@
+"""Mamba-2 SSD (state-space duality) mixer with EULER-ADAS numerics.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060): the
+sequence is split into chunks of length Q; within a chunk the recurrence is
+computed as a masked attention-like matmul (the "dual" form), across chunks a
+short ``lax.scan`` carries the [H, N, P] state.  All O(T·Q) / O(T·N·P)
+contractions route through ``euler_dot_general`` so the paper's approximate
+MAC datapath covers the SSM family too; the cross-chunk *state accumulation*
+stays exact f32 — it is the quire analogue (DESIGN.md §5).
+
+Decode: classic SSM recurrence ``S' = dA * S + dt * (B ⊗ x)``, ``y = C·S'``
+with a rolling conv buffer, O(1) per token — this is what makes the
+``long_500k`` shape runnable for the ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import euler_dot_general
+
+from .layers import Ctx, dense_init, dense_apply
+
+
+def ssm_init(key, cfg):
+    """Mamba-2 mixer params.  Group count G=1 (shared B/C across heads)."""
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    K = cfg.conv_kernel
+    conv_dim = di + 2 * N  # conv over [x, B, C] as in the reference impl
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z, x, B, C, dt]
+    d_proj = 2 * di + 2 * N + H
+    return {
+        "in_proj": dense_init(ks[0], d, d_proj),
+        "conv_w": jax.random.normal(ks[1], (K, conv_dim), jnp.float32) * (K * conv_dim) ** -0.5,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H)).astype(jnp.float32)),
+        "norm_g": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d),
+    }
+
+
+def _gated_rmsnorm(y, z, g, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, -1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * g
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv along T.  u: [B, T, C], w: [K, C]."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(K):  # K is tiny (4); unrolled taps vectorize cleanly
+        out = out + pad[:, i : i + u.shape[1], :] * w[i]
+    return out + b
+
+
+def _split_proj(zxbcdt, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xBC, dt
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, ctx: Ctx, chunk: int, initial_state=None):
+    """Chunked SSD: one ``lax.scan`` over chunks, remat'd per chunk.
+
+    The [Q, Q] dual (attention-like) form is materialized for ONE chunk at a
+    time and recomputed in the backward pass — streaming execution with O(Q²)
+    live memory instead of O(T·Q), which is what makes train_4k/500k shapes
+    fit.  The carried [B, H, N, P] state accumulates exactly in f32 (the
+    quire analogue).
+
+    Args:
+      x:  [B, T, H, P] inner activations.
+      dt: [B, T, H]    softplus'd step sizes.
+      A:  [H]          negative decay rates.
+      Bm/Cm: [B, T, N] input/output projections (G=1 group, shared by heads).
+    Returns:
+      y: [B, T, H, P], final_state [B, H, N, P].
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    nc = T // Q
+    assert T % Q == 0, (T, Q)
+
+    # [nc, B, Q, ...] chunk-major for the scan
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, Q, H, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, Q, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nc, Q, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nc, Q, N), 1, 0)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_body(S_in, inp):
+        xq, dtq, Bq, Cq = inp          # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        dA = dtq * A                   # [B, Q, H]
+        cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk dual form: scores[i,j] = C_i · B_j (EULER-quantized)
+        dn = (((2,), (2,)), ((0,), (0,)))
+        scores = euler_dot_general(Cq, Bq, dn, ctx.ecfg)       # [B,Qi,Qj]
+        # mask the log-decay BEFORE exp: masked entries are exp(+large) and
+        # inf forward values poison the backward (where-grad trap)
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]        # [B,Qi,Qj,H]
+        ldiff = jnp.where(causal[None, :, :, None], ldiff, -1e30)
+        Ldec = jnp.exp(ldiff)
+        M = scores[..., None] * Ldec                           # [B,Qi,Qj,H]
+        xdt = xq * dtq[..., None]                              # [B,Q,H,P]
+        # y_intra[i,h,p] = sum_j M[i,j,h] xdt[j,h,p]
+        dn2 = (((3,), (1,)), ((0, 1), (0, 2)))  # lhs [B,H,Qi,Qj] rhs [B,Qj,H,P]
+        y_intra = euler_dot_general(jnp.moveaxis(M, -1, 1), xdt, dn2,
+                                    ctx.ecfg)                  # [B,H,Qi,P]
+        y_intra = jnp.moveaxis(y_intra, 1, 2)                  # [B,Qi,H,P]
+        # inter-chunk: y_inter[i] = exp(cum_i) * (C_i · S_in)
+        dn3 = (((2,), (1,)), ((0,), (0,)))  # Cq [B,Q,N] x S_in→[B,N,H,P]
+        y_inter = euler_dot_general(
+            Cq, jnp.moveaxis(S_in, 1, 2), dn3, ctx.ecfg)       # [B,Q,H,P]
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        # state update: S_out = decay * S_in + sum_j B_j ⊗ (w_j x_j)
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)              # [B,Q,H]
+        w = xdt * decay_out[..., None]                         # [B,Q,H,P]
+        dn4 = (((1,), (1,)), ((0,), (0,)))  # contract Q
+        S_chunk = euler_dot_general(Bq, w, dn4, ctx.ecfg)      # [B,N,H,P]
+        S_chunk = jnp.moveaxis(S_chunk, 1, 2)                  # [B,H,N,P]
+        chunk_decay = jnp.exp(cum[:, -1, :])                   # [B,H]
+        S_out = S_in * chunk_decay[:, :, None, None] + S_chunk
+        return S_out, (y_intra + y_inter)
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    S0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bsz, H, N, P), jnp.float32))
+    with jax.named_scope("ssd_chunks"):
+        S_final, yc = jax.lax.scan(chunk_body, S0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, T, H, P)
+    return y, S_final
+
+
+def ssm_apply(p, x, ctx: Ctx, cfg, cache=None):
+    """Full Mamba-2 mixer.  cache=None → chunked prefill/train over [B,T,d];
+    cache={"state","conv"} with ctx.decode_pos → single-token decode."""
+    Bsz, T, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    K = cfg.conv_kernel
+
+    zxbcdt = dense_apply(p["in_proj"], x, ctx)  # [B, T, 2di+2N+H]
+    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
+    A = -jnp.exp(p["A_log"])  # [H]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,T,H]
+
+    if cache is not None and T == 1:
+        # ---- O(1) decode ----
+        conv_buf = cache["conv"]  # [B, K-1, conv_dim]
+        window = jnp.concatenate([conv_buf, xBC.astype(conv_buf.dtype)], 1)  # [B,K,cd]
+        conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        conv_out = jax.nn.silu(conv_out)[:, None, :]  # [B,1,cd]
+        xin = conv_out[..., :di].reshape(Bsz, 1, H, P)
+        Bm = conv_out[..., di : di + N]  # [B,1,N]
+        Cm = conv_out[..., di + N :]  # [B,1,N]
+        S = cache["state"]  # [B, H, N, P]
+        dA = jnp.exp(dt[:, 0, :] * A)  # [B,H]
+        # dBx[b,h,n,p] = dt * B_n * x_p  (input-side products EULER-quantized)
+        dBx = (
+            dt[:, 0, :, None, None]
+            * Bm[:, 0, None, :, None]
+            * xin[:, 0, :, None, :]
+        )
+        S_new = S * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], S_new)  # contract N
+        y = y + p["D"][None, :, None] * xin[:, 0]
+        y = y.reshape(Bsz, 1, di)
+        y = _gated_rmsnorm(y, z, p["norm_g"])
+        out = dense_apply(p["out_proj"], y.astype(x.dtype), ctx)
+        new_cache = {"state": S_new, "conv": window[:, 1:, :]}
+        return out, new_cache
+
+    # ---- chunked train/prefill ----
+    conv_out = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xin = conv_out[..., :di].reshape(Bsz, T, H, P)
+    Bm = conv_out[..., di : di + N]
+    Cm = conv_out[..., di + N :]
+    y, S_final = ssd_chunked(xin, dt, A, Bm, Cm, ctx, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xin
+    y = y.reshape(Bsz, T, di)
+    y = _gated_rmsnorm(y, z, p["norm_g"])
+    out = dense_apply(p["out_proj"], y.astype(x.dtype), ctx)
+    new_cache = None
+    if cache is not None:  # prefill: carry final state + conv tail
+        tail = xBC[:, T - (K - 1):, :].astype(cache["conv"].dtype)
+        new_cache = {"state": S_final, "conv": tail}
+    return out, new_cache
+
+
+def ssm_cache_init(cfg, batch: int, dtype=jnp.float32):
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    conv_dim = di + 2 * N
+    return {
+        "state": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+    }

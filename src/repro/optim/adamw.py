@@ -1,0 +1,89 @@
+"""AdamW + cosine schedule + global-norm clipping (self-contained, no optax).
+
+The moment tensors may live in a lower precision (``state_dtype`` — used by
+the arctic-480b config to halve optimizer HBM) and are sharded per
+``distributed.sharding.opt_shardings`` (ZeRO-1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``final_frac * base_lr``."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 1e-3                  # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    max_grad_norm: float | None = 1.0
+    state_dtype: Any = jnp.float32
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state, metrics)."""
+        count = state["count"] + 1
+        gnorm = global_norm(grads)
+        if self.max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, self.max_grad_norm)
+        lr = self.lr(count) if callable(self.lr) else jnp.float32(self.lr)
+        b1, b2 = self.b1, self.b2
+        c = count.astype(jnp.float32)
+        bias1 = 1 - b1 ** c
+        bias2 = 1 - b2 ** c
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mh = m_new / bias1
+            vh = v_new / bias2
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step
+            return (p_new.astype(p.dtype), m_new.astype(self.state_dtype),
+                    v_new.astype(self.state_dtype))
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": new_m, "v": new_v, "count": count}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,3 @@
+from .engine import ServeEngine, GenerationConfig, RequestBatcher
+
+__all__ = ["ServeEngine", "GenerationConfig", "RequestBatcher"]

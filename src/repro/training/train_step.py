@@ -1,0 +1,97 @@
+"""Train-step factory: microbatched grad accumulation, remat, EULER QAT
+forward, optional cross-pod gradient compression with error feedback.
+
+The returned ``train_step(state, batch)`` is a pure jit-able function; the
+launcher wraps it in ``jax.jit`` with in/out shardings from
+``distributed.sharding`` — data parallel over (pod, data), tensor parallel
+over model, optimizer state ZeRO-1 sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import collectives
+from repro.models.layers import Ctx
+from repro.optim.adamw import AdamW
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+    ef: Any = None  # error-feedback residual (grad compression), optional
+
+
+def init_state(model, optimizer: AdamW, key, *, compress: bool = False):
+    params = model.init(key)
+    opt = optimizer.init(params)
+    ef = collectives.ef_init(params) if compress else None
+    return TrainState(params=params, opt=opt,
+                      step=jnp.zeros((), jnp.int32), ef=ef)
+
+
+def make_train_step(model, optimizer: AdamW, ctx: Ctx, *,
+                    grad_accum: int = 1, compress_grads: bool = False,
+                    compress_block: int = 2048):
+    """Build ``train_step(state, batch) -> (state, metrics)``.
+
+    ``grad_accum`` > 1 splits the batch on the leading dim into micro-batches
+    scanned sequentially (activation memory / global batch decoupling).
+    ``compress_grads`` applies int8+EF compression to the accumulated
+    gradient — the numerics of the cross-pod DCN all-reduce wire format.
+    """
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, ctx)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                return x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(jnp.zeros_like, state.params)
+            with jax.named_scope("grad_accum"):
+                (grads, loss), _ = jax.lax.scan(
+                    acc_fn, (g0, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = {}
+
+        ef = state.ef
+        if compress_grads:
+            grads, ef = collectives.ef_compress(grads, ef, compress_block)
+
+        params, opt, opt_metrics = optimizer.update(grads, state.opt,
+                                                    state.params)
+        new_state = TrainState(params=params, opt=opt,
+                               step=state.step + 1, ef=ef)
+        out = {"loss": loss, **opt_metrics}
+        return new_state, out
+
+    return train_step
+
+
+def make_eval_step(model, ctx: Ctx):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, ctx)
+        return {"loss": loss, **metrics}
+    return eval_step

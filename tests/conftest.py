@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see 1 device;
+mesh-dependent tests spawn subprocesses with their own flags."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    # function-scoped: every test sees the same deterministic stream
+    # regardless of suite order
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def assert_finite(tree, what=""):
+    for leaf in jax.tree.leaves(tree):
+        assert jnp.isfinite(leaf).all(), f"non-finite values in {what}"

@@ -1,0 +1,112 @@
+"""Assigned-architecture configs: exact numbers + per-arch smoke tests
+(reduced config, one forward/train step on CPU, shapes + no NaNs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.core.engine import from_variant
+from repro.models.layers import Ctx
+from repro.models.transformer import Model
+
+ARCH_IDS = list(C.ALIASES)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    mod = C.get_config(arch)
+    cfg, exp = mod.FULL, mod.EXPECTED
+    for k, v in exp.items():
+        got = getattr(cfg, k)
+        assert got == v, f"{arch}.{k}: {got} != {v}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch, key):
+    """Reduced same-family config: one loss+grad step, finite, right shapes."""
+    mod = C.get_config(arch)
+    cfg = mod.SMOKE
+    assert cfg.family == mod.FULL.family
+    m = Model(cfg, from_variant(16, "L-21b"))
+    params = m.init(key)
+    ctx = Ctx(ecfg=m.ecfg)
+    B, T = 2, 64
+    ids = jax.random.randint(key, (B, T), 0, cfg.vocab)
+    inputs = ids
+    if cfg.embedding_inputs:
+        inputs = jax.random.normal(key, (B, T, cfg.d_model)) * 0.1
+    batch = {"inputs": inputs, "labels": ids}
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: m.loss(p, batch, ctx)[0]))(params)
+    assert jnp.isfinite(loss), arch
+    for leaf in jax.tree.leaves(grads):
+        assert jnp.isfinite(leaf).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes(arch, key):
+    mod = C.get_config(arch)
+    cfg = mod.SMOKE
+    m = Model(cfg, from_variant(16, "L-21b"))
+    params = m.init(key)
+    ctx = Ctx(ecfg=m.ecfg)
+    B, T = 2, 32
+    ids = jax.random.randint(key, (B, T), 0, cfg.vocab)
+    inputs = ids
+    if cfg.embedding_inputs:
+        inputs = jax.random.normal(key, (B, T, cfg.d_model)) * 0.1
+    h, _, _ = m.forward(params, inputs, ctx)
+    assert h.shape == (B, T, cfg.d_model)
+    logits = m.head(params, h, ctx)
+    assert logits.shape == (B, T, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode(arch, key):
+    mod = C.get_config(arch)
+    cfg = mod.SMOKE
+    m = Model(cfg, from_variant(16, "L-21b"))
+    params = m.init(key)
+    ctx = Ctx(ecfg=m.ecfg)
+    B = 2
+    cache = m.init_cache(B, 16)
+    tok = jax.random.randint(key, (B,), 0, cfg.vocab)
+    logits, cache2 = m.decode_step(params, tok, jnp.int32(3), cache, ctx)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+def test_shape_table():
+    assert C.SHAPES["train_4k"] == {"seq_len": 4096, "global_batch": 256,
+                                    "kind": "train"}
+    assert C.SHAPES["long_500k"]["seq_len"] == 524_288
+    cells = list(C.all_cells())
+    assert len(cells) == 40
+    applicable = [c for c in cells if c[2]]
+    # 10 archs x 3 non-long shapes + long_500k for ssm & hybrid = 32
+    assert len(applicable) == 32
+
+
+def test_long500k_applicability():
+    assert C.shape_applicable("mamba2-1.3b", "long_500k")
+    assert C.shape_applicable("hymba-1.5b", "long_500k")
+    for arch in ("yi-6b", "gemma2-27b", "arctic-480b", "chameleon-34b"):
+        assert not C.shape_applicable(arch, "long_500k")
+
+
+def test_tp_divisibility():
+    """Every arch must TP-shard over 16: flattened projection dims and the
+    padded vocab divide the model axis."""
+    for arch in ARCH_IDS:
+        cfg = C.get_config(arch).FULL
+        assert cfg.vocab_padded % 16 == 0, arch
+        if cfg.n_heads:
+            assert (cfg.n_heads * cfg.head_dim) % 16 == 0, arch
+            assert (cfg.n_kv_heads * cfg.head_dim) % 16 == 0, arch
+        if cfg.d_ff:
+            assert cfg.d_ff % 16 == 0, arch
+        if cfg.family in ("ssm", "hybrid"):
+            assert cfg.d_inner % 16 == 0, arch

@@ -1,0 +1,39 @@
+"""HLO collective parser: call-graph trip propagation (hoisting-aware)."""
+from repro.launch.dryrun import parse_collectives
+
+HLO = """
+HloModule test
+
+%inner_body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar1 = f32[8]{0} all-reduce(%x), replica_groups=[2,4]<=[8], metadata={op_name="jit(f)/layers/attn_kv/while/body/ar"}
+}
+
+%outer_body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %hoisted = f32[16]{0} all-gather(%y), replica_groups=[2,4]<=[8], metadata={op_name="jit(f)/layers/attn_kv/while/body/ag"}
+  %w2 = (s32[], f32[8]) while(%t), condition=%inner_cond, body=%inner_body, metadata={op_name="jit(f)/layers/attn_kv/while"}
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w1 = (s32[], f32[8]) while(%t0), condition=%outer_cond, body=%outer_body, metadata={op_name="jit(f)/layers/while"}
+  %top = f32[4]{0} reduce-scatter(%z), replica_groups=[4,2]<=[8], metadata={op_name="jit(f)/rs"}
+}
+"""
+
+
+def test_nested_loop_multipliers():
+    out = parse_collectives(HLO, {"layers": 10, "attn_kv": 5})
+    # inside both loops: x50
+    assert out["all-reduce"]["bytes_effective"] == 10 * 5 * 32
+    # hoisted out of the inner scan (sits in the OUTER body) — its op_name
+    # still says attn_kv but it must only be multiplied by the outer trips
+    assert out["all-gather"]["bytes_effective"] == 10 * 64
+    # entry-level: x1
+    assert out["reduce-scatter"]["bytes_effective"] == 16
+    assert out["reduce-scatter"]["max_group"] == 2
+
+
+def test_raw_bytes_and_counts():
+    out = parse_collectives(HLO, {})
+    assert out["all-reduce"]["count"] == 1
+    assert out["all-reduce"]["bytes"] == 32
+    assert out["all-gather"]["bytes"] == 64

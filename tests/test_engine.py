@@ -1,0 +1,136 @@
+"""EulerConfig / euler_dot_general behaviour across modes and variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import error_metrics
+from repro.core.engine import (EXACT, EulerConfig, euler_matmul, from_variant,
+                               operand_planes, VARIANT_NAMES)
+
+
+@pytest.fixture(scope="module")
+def mats(rng=np.random.default_rng(7)):
+    a = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(128, 32)), jnp.float32)
+    return a, b
+
+
+def test_variant_names_roundtrip():
+    for w in (8, 16, 32):
+        for v in VARIANT_NAMES:
+            cfg = from_variant(w, v)
+            assert cfg.variant == v
+            assert cfg.width == w
+
+
+def test_paper_names():
+    assert from_variant(16, "L-21b").paper_name == "b3_LP-6_T8"
+    assert from_variant(8, "L-1").paper_name == "LP-2"
+    assert from_variant(32, "L-22b").paper_name == "b5_LP-12_T20"
+
+
+def test_exact_mode_is_exact(mats):
+    a, b = mats
+    out = euler_matmul(a, b, EXACT)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("width", [8, 16, 32])
+def test_error_ordering_modes(mats, width):
+    """quant_only <= euler error-wise; more stages helps; exact == 0."""
+    a, b = mats
+    exact = np.asarray(a @ b)
+    errs = {}
+    for v in ("L-1", "L-2"):
+        cfg = from_variant(width, v)
+        errs[v] = float(error_metrics(euler_matmul(a, b, cfg), exact)["mse"])
+    q = EulerConfig(width=width, bounded=False, mode="quant_only")
+    errs["quant"] = float(error_metrics(euler_matmul(a, b, q), exact)["mse"])
+    assert errs["L-2"] <= errs["L-1"] * 1.05         # more stages, less error
+    assert errs["quant"] <= errs["L-1"]              # format-only <= format+ILM
+
+
+def test_bounded_adds_error(mats):
+    a, b = mats
+    exact = np.asarray(a @ b)
+    e_std = float(error_metrics(
+        euler_matmul(a, b, from_variant(16, "L-2")), exact)["mse"])
+    e_bnd = float(error_metrics(
+        euler_matmul(a, b, from_variant(16, "L-2b")), exact)["mse"])
+    assert e_bnd >= e_std * 0.8  # bounded never materially better (Table I)
+
+
+def test_simd_adds_error(mats):
+    """Table I: SIMD (shared 8-bit sub-lane) rows have more error."""
+    a, b = mats
+    exact = np.asarray(a @ b)
+    e_scalar = float(error_metrics(
+        euler_matmul(a, b, from_variant(16, "L-2")), exact)["mse"])
+    e_simd = float(error_metrics(
+        euler_matmul(a, b, from_variant(16, "L-2", simd="8_16")), exact)["mse"])
+    assert e_simd >= e_scalar
+
+
+def test_relative_accuracy_reasonable(mats):
+    a, b = mats
+    exact = np.asarray(a @ b)
+    for width, tol in ((8, 0.2), (16, 0.02), (32, 0.01)):
+        cfg = from_variant(width, "L-21b")
+        out = np.asarray(euler_matmul(a, b, cfg))
+        rel = np.linalg.norm(out - exact) / np.linalg.norm(exact)
+        assert rel < tol, (width, rel)
+
+
+def test_ste_gradients_flow(mats):
+    a, b = mats
+    cfg = from_variant(16, "L-21b")
+
+    def loss(a_):
+        return (euler_matmul(a_, b, cfg) ** 2).sum()
+
+    g = jax.grad(loss)(a)
+    assert jnp.isfinite(g).all()
+    assert float(jnp.abs(g).sum()) > 0
+    # STE: gradient close to the exact-product gradient
+    g_exact = jax.grad(lambda a_: ((a_ @ b) ** 2).sum())(a)
+    cos = float((g * g_exact).sum() /
+                (jnp.linalg.norm(g) * jnp.linalg.norm(g_exact)))
+    assert cos > 0.99
+
+
+def test_out_quant_roundtrip(mats):
+    a, b = mats
+    cfg = from_variant(16, "L-21b", out_quant=True)
+    out = euler_matmul(a, b, cfg)
+    # re-quantizing the output is the identity => it is on the posit lattice
+    from repro.core import posit as P
+    q = P.quantize(out, cfg.posit)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(q), rtol=1e-6)
+
+
+def test_bf16_engine_dtype(mats):
+    a, b = mats
+    cfg = from_variant(16, "L-21b", dtype=jnp.bfloat16)
+    out = euler_matmul(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16), cfg)
+    assert out.dtype == jnp.bfloat16
+    exact = np.asarray(a @ b)
+    rel = np.linalg.norm(np.asarray(out, np.float32) - exact) / np.linalg.norm(exact)
+    assert rel < 0.05
+
+
+def test_logfxp_baseline_runs(mats):
+    a, b = mats
+    cfg = EulerConfig(width=16, mode="logfxp", stages=3)
+    out = euler_matmul(a, b, cfg)
+    exact = np.asarray(a @ b)
+    rel = np.linalg.norm(np.asarray(out) - exact) / np.linalg.norm(exact)
+    assert rel < 0.1
+
+
+def test_planes_stop_gradient_on_rem(mats):
+    a, _ = mats
+    cfg = from_variant(16, "L-2")
+    val, rem = operand_planes(a, cfg)
+    g = jax.grad(lambda x: operand_planes(x, cfg)[1].sum())(a)
+    assert float(jnp.abs(g).sum()) == 0.0  # rem plane carries no gradient

@@ -1,0 +1,120 @@
+"""Failover policy: heartbeats, stragglers, elastic planning, replay."""
+import pytest
+
+from repro.distributed import failover as F
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_dead_host_detection():
+    clk = Clock()
+    mon = F.HeartbeatMonitor(["h0", "h1", "h2"], dead_after_s=10, clock=clk)
+    for step in range(5):
+        clk.t += 1
+        for h in ("h0", "h1", "h2"):
+            mon.beat(h, step)
+    clk.t += 11  # h2 goes silent
+    mon.beat("h0", 6)
+    mon.beat("h1", 6)
+    assert mon.dead_hosts() == ["h2"]
+    assert set(mon.alive()) == {"h0", "h1"}
+
+
+def test_straggler_detection():
+    clk = Clock()
+    hosts = [f"h{i}" for i in range(8)]
+    mon = F.HeartbeatMonitor(hosts, dead_after_s=1e9, clock=clk)
+    det = F.StragglerDetector(k_mad=4.0, patience=2)
+    for step in range(1, 8):
+        for h in hosts:
+            clk.t += 0.0
+            mon.beat(h, step)
+            # h7 is 3x slower
+        clk.t += 1.0
+        for h in hosts[:-1]:
+            mon.hosts[h].step_ewma = 1.0
+        mon.hosts["h7"].step_ewma = 3.0
+        out = det.update(mon)
+    assert out == ["h7"]
+
+
+def test_policy_elastic_down_on_death():
+    clk = Clock()
+    mon = F.HeartbeatMonitor(["h0", "h1", "h2"], dead_after_s=5, clock=clk)
+    det = F.StragglerDetector()
+    pol = F.FailoverPolicy(min_hosts=2)
+    for h in ("h0", "h1", "h2"):
+        mon.beat(h, 1)
+    clk.t += 10
+    mon.beat("h0", 2)
+    mon.beat("h1", 2)
+    d = pol.decide(mon, det, step=2)
+    assert d.action == F.Action.ELASTIC_DOWN
+    assert d.drop_hosts == ("h2",)
+
+
+def test_policy_abort_when_too_few():
+    clk = Clock()
+    mon = F.HeartbeatMonitor(["h0", "h1"], dead_after_s=5, clock=clk)
+    det = F.StragglerDetector()
+    pol = F.FailoverPolicy(min_hosts=2)
+    mon.beat("h0", 1)
+    clk.t += 10
+    mon.beat("h0", 2)
+    d = pol.decide(mon, det, step=2)
+    assert d.action == F.Action.ABORT
+
+
+def test_policy_straggler_escalation():
+    clk = Clock()
+    hosts = [f"h{i}" for i in range(4)]
+    mon = F.HeartbeatMonitor(hosts, dead_after_s=1e9, clock=clk)
+    det = F.StragglerDetector(k_mad=2.0, patience=1, min_hosts=3)
+    pol = F.FailoverPolicy(min_hosts=2, straggler_grace=3)
+    actions = []
+    for step in range(1, 8):
+        for h in hosts:
+            mon.beat(h, step)
+        for h in hosts[:-1]:
+            mon.hosts[h].step_ewma = 1.0
+        mon.hosts["h3"].step_ewma = 10.0
+        actions.append(pol.decide(mon, det, step).action)
+    assert F.Action.CHECKPOINT_NOW in actions       # first response
+    assert actions[-1] == F.Action.ELASTIC_DOWN     # escalates
+
+
+def test_plan_elastic_mesh():
+    assert F.plan_elastic_mesh(256, 16) == (16, 16)
+    assert F.plan_elastic_mesh(240, 16) == (15, 16)
+    with pytest.raises(ValueError):
+        F.plan_elastic_mesh(8, 16)
+
+
+def test_replay_plan_matches_pipeline_determinism():
+    from repro.data import SyntheticLM
+    plan = F.replay_plan(ckpt_step=10, failed_step=13)
+    assert plan["replay_steps"] == [11, 12, 13]
+    data = SyntheticLM(vocab=128, seed=0)
+    import numpy as np
+    for s in plan["replay_steps"]:
+        b1 = data.batch(s, 4, 32)
+        b2 = data.batch(s, 4, 32)  # re-issued after "restart"
+        np.testing.assert_array_equal(np.asarray(b1["inputs"]),
+                                      np.asarray(b2["inputs"]))
+
+
+def test_data_sharding_disjoint():
+    from repro.data import SyntheticLM
+    import numpy as np
+    data = SyntheticLM(vocab=128, seed=0)
+    full = [data.batch(0, 8, 16, shard=i, num_shards=4)["inputs"]
+            for i in range(4)]
+    assert all(f.shape == (2, 16) for f in full)
+    # different shards see different streams
+    assert not np.array_equal(np.asarray(full[0]), np.asarray(full[1]))

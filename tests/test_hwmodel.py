@@ -1,0 +1,75 @@
+"""Calibrated hardware model: paper-table lookups, headline claims, and the
+structural regression between published points."""
+import numpy as np
+import pytest
+
+from repro.core import hwmodel as HW
+
+
+def test_headline_claims_match_abstract():
+    h = HW.headline_claims()
+    assert abs(h["lut_reduction_best"] - 0.414) < 0.005   # 41.4% LUTs
+    assert abs(h["delay_reduction_best"] - 0.761) < 0.005 # 76.1% delay
+    assert abs(h["power_reduction_best"] - 0.719) < 0.005 # 71.9% power
+    assert h["edp_ratio_32b"] >= 10.0                     # up to 10x EDP
+    assert h["max_freq_ghz"] == 1.84
+    assert h["min_power_mw"] == 19.8
+
+
+def test_fpga_table_consistency():
+    """Reproduction finding: every UNBOUNDED row of Table II satisfies
+    EDP == P*D^2 within rounding, while every BOUNDED (*b) row's tabulated
+    EDP exceeds P*D^2 by a consistent 2-5x — the paper's bounded EDP column
+    was evidently computed under a different convention.  We assert the
+    structure of the discrepancy (recorded in EXPERIMENTS.md) rather than
+    silently 'fixing' the table."""
+    for (simd, width), rows in HW.FPGA.items():
+        for var, (luts, ffs, delay, power, edp) in rows.items():
+            derived = power * delay * delay * 1e-3
+            rel = abs(derived - edp) / max(edp, 1e-9)
+            if var.endswith("b"):
+                assert derived < edp, (simd, width, var)  # always above P*D^2
+            else:
+                assert rel < 0.35, (simd, width, var, derived, edp)
+
+
+def test_bounded_always_cheaper():
+    """Table II: every bounded variant beats its unbounded twin on LUTs and
+    power in the same (simd, width) group."""
+    for key, rows in HW.FPGA.items():
+        for base in ("L-1", "L-2", "L-21", "L-22"):
+            lut_u, _, _, pw_u, _ = rows[base]
+            lut_b, _, _, pw_b, _ = rows[base + "b"]
+            assert lut_b < lut_u, (key, base)
+            assert pw_b < pw_u, (key, base)
+
+
+def test_throughput_identities():
+    m = HW.perf_metrics("L-1b")
+    assert abs(m["tp_p8_gops"] - 73.6) < 0.1     # Table IV
+    assert abs(m["ee_p8_tops_w"] - 3.556) < 0.01
+    m21 = HW.perf_metrics("L-21b")
+    assert abs(m21["cd_p8_tops_mm2"] - 0.529) < 0.01
+
+
+def test_regression_interpolates_sane():
+    p = HW.predict_fpga(16, "L-21b")
+    ref = HW.FPGA[("scalar", 16)]["L-21b"]
+    assert abs(p["luts"] - ref[0]) / ref[0] < 0.6
+    assert p["power_mw"] > 0 and p["delay_ns"] > 0
+
+
+def test_stagewise_bounded_io_cheaper():
+    """Table V: bounded variants cut the input/output processing stages."""
+    for v in ("L-1", "L-2", "L-21", "L-22"):
+        a_u, p_u, _, _ = HW.STAGEWISE[v]
+        a_b, p_b, _, _ = HW.STAGEWISE[v + "b"]
+        assert a_b[0] < a_u[0] and a_b[3] < a_u[3]   # S0 + output area
+        assert p_b[0] < p_u[0]
+
+
+def test_prototype_best_point():
+    lat, pw, en = HW.PROTOTYPE["L-21b"]
+    assert (lat, pw, en) == (78, 0.29, 22.6)
+    for k, (l2, p2, e2) in HW.PROTOTYPE_PRIOR.items():
+        assert e2 > en  # every prior platform uses more energy/frame

@@ -1,0 +1,98 @@
+"""Pallas kernel validation (interpret=True on CPU): shape/dtype sweeps
+against the pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import posit as P
+from repro.core.engine import from_variant, EulerConfig
+from repro.kernels import ops, ref
+from repro.kernels.logmac import decode_planes_raw
+
+CFGS = [P.POSIT8, P.BPOSIT8, P.POSIT16, P.BPOSIT16, P.POSIT32, P.BPOSIT32]
+
+
+def _rand(rng, shape, scale_pow=6):
+    x = rng.normal(size=shape).astype(np.float32)
+    return x * np.exp2(rng.integers(-scale_pow, scale_pow, size=shape)).astype(np.float32)
+
+
+@pytest.mark.parametrize("pc", CFGS, ids=lambda c: c.name)
+@pytest.mark.parametrize("shape", [(37,), (64, 33), (5, 7, 11)])
+def test_encode_kernel_matches_ref(pc, shape, rng):
+    x = jnp.asarray(_rand(rng, shape))
+    got = ops.encode(x, pc, block=128)
+    want = ref.ref_encode(x, pc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("pc", CFGS, ids=lambda c: c.name)
+def test_decode_kernel_matches_ref(pc, rng):
+    pats = jnp.asarray(
+        rng.integers(0, 1 << min(pc.n_bits, 16), size=300), jnp.uint32)
+    got = ops.decode(pats, pc, block=128)
+    want = ref.ref_decode(pats, pc)
+    got, want = np.asarray(got), np.asarray(want)
+    # exclude NaR and f32-subnormal magnitudes: this host runs with FTZ
+    # enabled (preloaded fast-math lib), which flushes the kernel's
+    # two-factor 2^e product for |x| < 2^-126 in interpret mode
+    mask = ~np.isnan(want) & (np.abs(want) > 2.0 ** -120)
+    np.testing.assert_allclose(got[mask], want[mask], rtol=1e-6)
+
+
+@pytest.mark.parametrize("width,variant", [(8, "L-1"), (8, "L-21b"),
+                                           (16, "L-2"), (16, "L-21b"),
+                                           (32, "L-22b")])
+def test_inkernel_planes_match_core(width, variant, rng):
+    """decode_planes_raw (the kernel body) == core ilm plane construction."""
+    cfg = from_variant(width, variant)
+    pc = cfg.posit
+    pats = jnp.asarray(rng.integers(0, 1 << min(pc.n_bits, 16), size=512),
+                       jnp.uint32)
+    got_v, got_r = decode_planes_raw(pats, pc, cfg.stages, cfg.trunc,
+                                     cfg.sublane)
+    want_v, want_r = ref.ref_planes(pats, cfg)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_r), np.asarray(want_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mnk", [(32, 16, 48), (128, 128, 128), (65, 33, 70),
+                                 (256, 64, 200)])
+@pytest.mark.parametrize("variant", ["L-21b", "L-2"])
+def test_logmac_kernel_matches_ref(mnk, variant, rng):
+    M, N, K = mnk
+    cfg = from_variant(16, variant)
+    pc = cfg.posit
+    a = ref.ref_encode(jnp.asarray(_rand(rng, (M, K), 3)), pc)
+    b = ref.ref_encode(jnp.asarray(_rand(rng, (K, N), 3)), pc)
+    got = ops.logmac_matmul(a, b, cfg, bm=32, bn=32, bk=32)
+    want = ref.ref_logmac(a, b, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("width", [8, 16, 32])
+def test_fused_path_close_to_engine(width, rng):
+    """Posit-encode + logmac kernel ~= euler_matmul on floats (same math,
+    different plumbing — fused path encodes once, engine path quantizes)."""
+    from repro.core.engine import euler_matmul
+    cfg = from_variant(width, "L-21b", pre_scale=False)
+    x = jnp.asarray(rng.normal(size=(48, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 24)).astype(np.float32))
+    fused = ops.euler_matmul_fused(x, w, cfg, bm=16, bn=8, bk=32)
+    engine = euler_matmul(x, w, cfg)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(engine),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_logmac_zero_padding_is_neutral(rng):
+    """Padding with posit-zero patterns must not change the product."""
+    cfg = from_variant(16, "L-21b")
+    pc = cfg.posit
+    a = ref.ref_encode(jnp.asarray(rng.normal(size=(17, 19)), jnp.float32), pc)
+    b = ref.ref_encode(jnp.asarray(rng.normal(size=(19, 13)), jnp.float32), pc)
+    got = ops.logmac_matmul(a, b, cfg, bm=16, bn=16, bk=16)  # forces padding
+    want = ref.ref_logmac(a, b, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)

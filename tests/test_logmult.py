@@ -1,0 +1,113 @@
+"""Stage-adaptive ILM: telescoping identity, paper error bounds (Eq. 8-9),
+truncation semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import logmult as LM
+from repro.core import posit as P
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 6])
+def test_telescoping_identity(n, rng):
+    """ILM_n(A,B) == A*B - rem_n(A)*rem_n(B) for random ints (the identity
+    that maps the paper's log-domain pipeline onto two exact matmuls)."""
+    A = rng.integers(1, 1 << 16, size=500)
+    B = rng.integers(1, 1 << 16, size=500)
+    lit = np.array([LM.np_ilm_exact(a, b, n) for a, b in zip(A, B)], object)
+    ra = np.array([LM.np_clear_top_set_bits(a, n) for a in A], object)
+    rb = np.array([LM.np_clear_top_set_bits(b, n) for b in B], object)
+    tele = A * B - ra * rb
+    assert (lit == tele).all()
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4])
+def test_clear_top_set_bits_matches_oracle(n, rng):
+    x = rng.integers(0, 1 << 24, size=4096).astype(np.uint32)
+    got = np.asarray(LM.clear_top_set_bits(jnp.asarray(x), n))
+    ref = np.array([LM.np_clear_top_set_bits(int(v), n) for v in x], np.uint32)
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("n,m", [(2, None), (3, 4), (4, 8), (6, 10)])
+def test_relative_error_bound(n, m, rng):
+    """Paper Eq. 8-9: RE(n) < 2^-2n; truncation adds <= 2^-m PER OPERAND
+    (the paper states the one-operand form; with both operands truncated the
+    product bound is 2^-2n + 2*2^-m — we assert the two-operand version and
+    note the discrepancy in EXPERIMENTS.md)."""
+    W = 20
+    fa = rng.integers(0, 1 << W, size=5000)
+    fb = rng.integers(0, 1 << W, size=5000)
+    A = (1 << W) | fa
+    B = (1 << W) | fb
+
+    def planes(x):
+        mant = x if m is None else ((x >> (W - m)) << (W - m))
+        rem = np.array([LM.np_clear_top_set_bits(int(v), n) for v in mant],
+                       object)
+        return mant.astype(object), rem
+
+    va, ra = planes(A)
+    vb, rb = planes(B)
+    approx = va * vb - ra * rb
+    exact = A.astype(object) * B.astype(object)
+    re = np.array([abs(int(a) - int(e)) / int(e)
+                   for a, e in zip(approx, exact)])
+    bound = 2.0 ** (-2 * n) + (2 * 2.0 ** (-m) if m is not None else 0.0)
+    assert re.max() <= bound + 1e-12, (re.max(), bound)
+    if m is not None:  # the one-operand paper bound holds when only A truncates
+        va1, ra1 = planes(A)
+        vb1 = B.astype(object)
+        rb1 = np.array([LM.np_clear_top_set_bits(int(v), n) for v in B], object)
+        approx1 = va1 * vb1 - ra1 * rb1
+        re1 = np.array([abs(int(a) - int(e)) / int(e)
+                        for a, e in zip(approx1, exact)])
+        assert re1.max() <= 2.0 ** (-2 * n) + 2.0 ** (-m) + 1e-12
+
+
+def test_error_decreases_with_stages(rng):
+    """More ILM stages => lower max relative error (Fig. 4 trend)."""
+    W = 16
+    A = ((1 << W) | rng.integers(0, 1 << W, 2000)).astype(np.float64)
+    B = ((1 << W) | rng.integers(0, 1 << W, 2000)).astype(np.float64)
+    errs = []
+    for n in (1, 2, 3, 4):
+        ra = np.array([LM.np_clear_top_set_bits(int(a), n) for a in A], np.float64)
+        rb = np.array([LM.np_clear_top_set_bits(int(b), n) for b in B], np.float64)
+        approx = A * B - ra * rb
+        errs.append(np.abs(approx - A * B + (A * B - approx)).max()
+                    if False else np.abs((approx - A * B) / (A * B)).max())
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_truncate_mantissa():
+    frac = jnp.asarray([0b1111_1111], jnp.uint32)
+    out = LM.truncate_mantissa(frac, 8, 4)
+    assert int(out[0]) == 0b1111_0000
+    assert int(LM.truncate_mantissa(frac, 8, None)[0]) == 0b1111_1111
+    assert int(LM.truncate_mantissa(frac, 8, 8)[0]) == 0b1111_1111
+
+
+def test_ilm_pair_matches_bigint_oracle(rng):
+    """End-to-end: posit-decoded planes reproduce the literal per-stage ILM
+    on the (integer) mantissa lattice."""
+    cfg = P.POSIT16
+    n = 4
+    x = rng.normal(size=256).astype(np.float32)
+    y = rng.normal(size=256).astype(np.float32)
+    got = np.asarray(LM.ilm_pair(jnp.asarray(x), jnp.asarray(y), cfg, n, None))
+    # oracle: decode patterns, run literal ILM on mantissas, scale back
+    W = cfg.frac_window
+    pa = [int(v) for v in np.asarray(P.encode_from_float(jnp.asarray(x), cfg))]
+    pb = [int(v) for v in np.asarray(P.encode_from_float(jnp.asarray(y), cfg))]
+    ref = []
+    for a_, b_ in zip(pa, pb):
+        fa = P.decode_fields(jnp.asarray([a_], jnp.uint32), cfg)
+        fb = P.decode_fields(jnp.asarray([b_], jnp.uint32), cfg)
+        ma = (1 << W) | int(fa["frac"][0])
+        mb = (1 << W) | int(fb["frac"][0])
+        prod = LM.np_ilm_exact(ma, mb, n)
+        sgn = (-1) ** (int(fa["sign"][0]) ^ int(fb["sign"][0]))
+        scale = int(fa["scale"][0]) + int(fb["scale"][0])
+        ref.append(sgn * prod * 2.0 ** (scale - 2 * W))
+    np.testing.assert_allclose(got, np.asarray(ref, np.float32), rtol=2e-6)

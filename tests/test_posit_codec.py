@@ -1,0 +1,107 @@
+"""Bit-accurate codec tests: exhaustive vs the big-int oracle, roundtrip,
+rounding, bounded-regime semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import posit as P
+
+ALL_CFGS = [P.POSIT8, P.BPOSIT8, P.POSIT16, P.BPOSIT16, P.POSIT32, P.BPOSIT32]
+SMALL_CFGS = [P.POSIT8, P.BPOSIT8, P.POSIT16, P.BPOSIT16]
+
+
+@pytest.mark.parametrize("cfg", SMALL_CFGS, ids=lambda c: c.name)
+def test_decode_exhaustive_vs_oracle(cfg):
+    n = 1 << cfg.n_bits
+    pats = jnp.arange(n, dtype=jnp.uint32)
+    got = np.asarray(P.decode_to_float(pats, cfg))
+    ref = np.array([P.np_decode(p, cfg) for p in range(n)], np.float32)
+    np.testing.assert_array_equal(np.nan_to_num(got), np.nan_to_num(ref))
+    assert np.isnan(got[n // 2]) and np.isnan(ref[n // 2])  # NaR
+
+
+@pytest.mark.parametrize("cfg", SMALL_CFGS, ids=lambda c: c.name)
+def test_roundtrip_identity(cfg):
+    """encode(decode(p)) == p for every pattern (codec is a bijection on
+    representable values)."""
+    n = 1 << cfg.n_bits
+    pats = jnp.arange(n, dtype=jnp.uint32)
+    vals = P.decode_to_float(pats, cfg)
+    re = np.asarray(P.encode_from_float(jnp.nan_to_num(vals), cfg))
+    mask = ~np.isnan(np.asarray(vals))
+    np.testing.assert_array_equal(re[mask], np.asarray(pats)[mask])
+
+
+@pytest.mark.parametrize("cfg", ALL_CFGS, ids=lambda c: c.name)
+def test_encode_matches_oracle_random(cfg, rng):
+    x = rng.normal(size=2048).astype(np.float32) * np.exp2(
+        rng.integers(-12, 12, size=2048)).astype(np.float32)
+    got = np.asarray(P.encode_from_float(jnp.asarray(x), cfg))
+    ref = np.array([P.np_encode(float(v), cfg) for v in x], np.uint32)
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("cfg", ALL_CFGS, ids=lambda c: c.name)
+def test_quantize_is_nearest(cfg, rng):
+    """Quantized value must be one of the two neighbours and the closer one
+    (spot-check nearest-ness via the decoded lattice)."""
+    x = rng.normal(size=512).astype(np.float32)
+    q = np.asarray(P.quantize(jnp.asarray(x), cfg))
+    # re-quantizing a representable value is the identity (idempotence)
+    q2 = np.asarray(P.quantize(jnp.asarray(q), cfg))
+    np.testing.assert_array_equal(q, q2)
+
+
+@pytest.mark.parametrize("cfg", SMALL_CFGS, ids=lambda c: c.name)
+def test_monotone_in_pattern_order(cfg):
+    """Posit property: values are monotone in two's-complement int order."""
+    n = 1 << cfg.n_bits
+    pats = (np.arange(n, dtype=np.int64) + n // 2 + 1) % n  # NaR..max wraps
+    vals = np.asarray(P.decode_to_float(jnp.asarray(pats, jnp.uint32), cfg))
+    vals = vals[~np.isnan(vals)]
+    assert (np.diff(vals) > 0).all()
+
+
+def test_bounded_saturates_regime():
+    """bPosit max scale is capped by R, standard posit by N-2."""
+    assert P.BPOSIT8.max_scale < P.POSIT8.max_scale
+    assert P.BPOSIT16.max_scale < P.POSIT16.max_scale
+    # huge values clamp to maxpos, not NaR
+    big = jnp.asarray([1e30], jnp.float32)
+    pat = P.encode_from_float(big, P.BPOSIT8)
+    assert int(pat[0]) == (1 << 7) - 1  # maxpos body
+
+
+def test_special_values():
+    for cfg in (P.POSIT16, P.BPOSIT16):
+        pats = P.encode_from_float(
+            jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan]), cfg)
+        assert int(pats[0]) == 0 and int(pats[1]) == 0
+        nar = 1 << (cfg.n_bits - 1)
+        assert int(pats[2]) == nar and int(pats[3]) == nar and int(pats[4]) == nar
+        back = P.decode_to_float(pats, cfg)
+        assert float(back[0]) == 0.0
+        assert np.isnan(np.asarray(back[2:])).all()
+
+
+def test_storage_roundtrip():
+    for cfg in ALL_CFGS:
+        pats = jnp.arange(1 << min(cfg.n_bits, 12), dtype=jnp.uint32)
+        st = P.to_storage(pats, cfg)
+        assert st.dtype == cfg.storage_dtype
+        np.testing.assert_array_equal(np.asarray(P.from_storage(st, cfg)),
+                                      np.asarray(pats))
+
+
+def test_decode_fields_consistency():
+    """value == (-1)^s * 2^(scale-W) * (2^W + frac) for all 16-bit patterns."""
+    cfg = P.POSIT16
+    pats = jnp.arange(1 << 16, dtype=jnp.uint32)
+    f = P.decode_fields(pats, cfg)
+    W = cfg.frac_window
+    mant = (np.float64(2.0) ** W) + np.asarray(f["frac"], np.float64)
+    val = np.where(np.asarray(f["sign"]) == 1, -1.0, 1.0) * mant * \
+        np.exp2(np.asarray(f["scale"], np.float64) - W)
+    direct = np.asarray(P.decode_to_float(pats, cfg), np.float64)
+    ok = ~(np.asarray(f["is_zero"]) | np.asarray(f["is_nar"]))
+    np.testing.assert_allclose(val[ok], direct[ok], rtol=1e-6)

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import logmult as LM
+from repro.core import posit as P
+from repro.distributed import collectives as CO
+
+CFG_STRAT = st.sampled_from(
+    [P.POSIT8, P.BPOSIT8, P.POSIT16, P.BPOSIT16, P.POSIT32, P.BPOSIT32])
+
+# NOTE: this environment has FTZ enabled (a preloaded lib built with
+# -ffast-math), which hypothesis' float strategies refuse to run under —
+# so floats are built from integer (sign, mantissa, exponent) strategies.
+FLOATS = st.one_of(
+    st.just(0.0),
+    st.builds(
+        lambda s, m, e: float(np.float32((-1.0) ** s * (1 + m / 2**23)
+                                         * 2.0 ** e)),
+        st.integers(0, 1), st.integers(0, 2**23 - 1), st.integers(-38, 38)),
+)
+
+
+@given(CFG_STRAT, FLOATS)
+@settings(max_examples=200, deadline=None)
+def test_quantize_idempotent(cfg, x):
+    """quantize(quantize(x)) == quantize(x) — projection property."""
+    q1 = float(P.quantize(jnp.float32(x), cfg))
+    q2 = float(P.quantize(jnp.float32(q1), cfg))
+    assert q1 == q2 or (np.isnan(q1) and np.isnan(q2))
+
+
+@given(CFG_STRAT, FLOATS)
+@settings(max_examples=200, deadline=None)
+def test_quantize_sign_and_zero(cfg, x):
+    q = float(P.quantize(jnp.float32(x), cfg))
+    if x == 0:
+        assert q == 0
+    else:
+        assert np.sign(q) == np.sign(x)  # posits never round across zero
+
+
+@given(CFG_STRAT, FLOATS, FLOATS)
+@settings(max_examples=100, deadline=None)
+def test_quantize_monotone(cfg, a, b):
+    """x <= y => quantize(x) <= quantize(y)."""
+    lo, hi = min(a, b), max(a, b)
+    qlo = float(P.quantize(jnp.float32(lo), cfg))
+    qhi = float(P.quantize(jnp.float32(hi), cfg))
+    assert qlo <= qhi
+
+
+@given(CFG_STRAT, FLOATS)
+@settings(max_examples=200, deadline=None)
+def test_encode_matches_bigint_oracle(cfg, x):
+    got = int(P.encode_from_float(jnp.float32(x), cfg))
+    want = P.np_encode(float(np.float32(x)), cfg)
+    assert got == want
+
+
+@given(st.integers(1, (1 << 24) - 1), st.integers(1, (1 << 24) - 1),
+       st.integers(1, 6))
+@settings(max_examples=200, deadline=None)
+def test_ilm_identity_property(a, b, n):
+    lit = LM.np_ilm_exact(a, b, n)
+    tele = a * b - LM.np_clear_top_set_bits(a, n) * LM.np_clear_top_set_bits(b, n)
+    assert lit == tele
+    # ILM never overshoots the exact product and error bound holds
+    assert 0 <= a * b - lit
+    assert a * b - lit <= (a * b) * 2.0 ** (-2 * n) + 1
+
+
+@given(st.lists(st.integers(-10**6, 10**6).map(lambda v: v / 1000.0),
+                min_size=1, max_size=300))
+@settings(max_examples=100, deadline=None)
+def test_int8_roundtrip_error_bound(xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    q, s, meta = CO.int8_quantize(x, block=64)
+    back = CO.int8_dequantize(q, s, meta)
+    bound = np.asarray(s).max() * 0.5 + 1e-6
+    assert float(jnp.abs(back - x).max()) <= bound
+
+
+@given(st.integers(-127, 126))
+@settings(max_examples=256, deadline=None)
+def test_posit8_total_order(s):
+    """Exhaustive-by-hypothesis: posit values are monotone in the signed
+    (two's-complement) integer order of their patterns, NaR (-128) excluded."""
+    cfg = P.POSIT8
+    a = P.np_decode(s % 256, cfg)
+    b = P.np_decode((s + 1) % 256, cfg)
+    assert a < b

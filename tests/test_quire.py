@@ -1,0 +1,49 @@
+"""Quire accumulation: exact big-int oracle vs the f32/Kahan/chunked TPU
+adaptations (DESIGN.md §7.1 — the measured deviation)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from fractions import Fraction
+
+from repro.core import posit as P
+from repro.core import quire as Q
+
+
+@pytest.mark.parametrize("K", [64, 512, 4096])
+def test_f32_accumulation_close_to_exact_quire(K, rng):
+    cfg = P.POSIT16
+    a = rng.normal(size=K).astype(np.float32)
+    b = rng.normal(size=K).astype(np.float32)
+    pa = P.encode_from_float(jnp.asarray(a), cfg)
+    pb = P.encode_from_float(jnp.asarray(b), cfg)
+    exact = Q.np_quire_dot(np.asarray(pa), np.asarray(pb), cfg)
+    va = P.decode_to_float(pa, cfg)
+    vb = P.decode_to_float(pb, cfg)
+    f32 = float(jnp.dot(va, vb))
+    kah = float(Q.kahan_sum(va * vb))
+    chk = float(Q.chunked_sum(va * vb, chunk=256))
+    scale = float(abs(exact)) + 1e-3
+    for got, tol in ((f32, 1e-4), (kah, 1e-5), (chk, 1e-4)):
+        assert abs(got - float(exact)) / scale < tol * np.sqrt(K), (got, exact)
+
+
+def test_kahan_beats_naive_on_adversarial_sum():
+    x = jnp.asarray([1e8, 1.0, -1e8, 1.0] * 64, jnp.float32)
+    naive = float(jnp.cumsum(x)[-1])
+    kah = float(Q.kahan_sum(x))
+    assert kah == 128.0  # Neumaier recovers the exact sum
+    assert abs(kah - 128.0) <= abs(naive - 128.0)
+
+
+def test_quire_round_to_nearest():
+    cfg = P.POSIT16
+    total = Fraction(3, 7)
+    pat = Q.np_quire_round(total, cfg)
+    val = P.np_decode(pat, cfg)
+    # within one ULP of the exact value (ULP at 0.43 for posit16 ~ 2^-13)
+    assert abs(val - 3 / 7) < 2 ** -12
+    # re-encoding the decoded value is stable (it's on the lattice)
+    assert P.np_encode(val, cfg) == pat
+    # and no other representable value is closer: nudging by 1 pattern
+    for nb in (pat - 1, pat + 1):
+        assert abs(P.np_decode(nb, cfg) - 3 / 7) >= abs(val - 3 / 7)
