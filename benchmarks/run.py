@@ -30,7 +30,7 @@ def _section(name):
         table9_prototype.main()
     elif name == "engine":
         from benchmarks import engine_bench
-        engine_bench.main()
+        engine_bench.main([])  # argv isolation: section names are not flags
     elif name == "roofline":
         from benchmarks import roofline
         roofline.main()

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import numerics as N
 from repro.core.engine import EulerConfig, from_variant
 from repro.data import SyntheticLM
 from repro.models.config import ModelConfig
@@ -45,9 +46,10 @@ def _train_lm(steps=150, seed=0):
     return m, state.params, data
 
 
-def _lm_accuracy(m, params, data, ecfg, n_batches=2):
-    ctx = Ctx(ecfg=ecfg)
-    m2 = Model(LM_CFG, ecfg)
+def _lm_accuracy(m, params, data, policy, n_batches=2):
+    nctx = N.NumericsContext(policy=policy)
+    ctx = Ctx(numerics=nctx)
+    m2 = Model(LM_CFG, numerics=nctx)
     acc = n = 0
     for i in range(1000, 1000 + n_batches):
         b = data.batch(i, 6, 128)
@@ -74,17 +76,19 @@ def _train_mlp(seed=0):
     params = {"w1": jax.random.normal(k1, (64, 128)) * 0.125,
               "w2": jax.random.normal(k2, (128, 16)) * 0.09}
 
-    def fwd(p, x, ecfg):
-        from repro.core.engine import euler_matmul
-        h = jax.nn.relu(euler_matmul(x, p["w1"], ecfg))
-        return euler_matmul(h, p["w2"], ecfg)
+    def fwd(p, x, policy):
+        # both matmuls trace under the "mlp" scope, so MLP-targeted policy
+        # rules apply to this workload too
+        with N.use(policy), N.scope("mlp"):
+            h = jax.nn.relu(N.matmul(x, p["w1"]))
+            return N.matmul(h, p["w2"])
 
     exact = EulerConfig(mode="exact")
 
     @jax.jit
     def step(p, lr):
         def loss(p):
-            logits = fwd(p, x, exact)
+            logits = fwd(p, x, N.PrecisionPolicy.uniform(exact))
             return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
         g = jax.grad(loss)(p)
         return jax.tree.map(lambda a, b: a - lr * b, p, g)
@@ -94,24 +98,33 @@ def _train_mlp(seed=0):
     return params, fwd, x, y
 
 
-def _mlp_accuracy(params, fwd, x, y, ecfg):
-    logits = fwd(params, x, ecfg)
+def _mlp_accuracy(params, fwd, x, y, policy):
+    logits = fwd(params, x, policy)
     return 100.0 * float((jnp.argmax(logits, -1) == y).mean())
 
 
+def _uniform(ecfg):
+    return N.PrecisionPolicy.uniform(ecfg)
+
+
 CONFIGS = [
-    ("FP32", EulerConfig(mode="exact")),
-    ("Posit-8 exact", EulerConfig(width=8, bounded=False, mode="posit")),
-    ("Posit-16 exact", EulerConfig(width=16, bounded=False, mode="posit")),
-    ("Posit-32 exact", EulerConfig(width=32, bounded=False, mode="posit")),
-    ("P8 L-2", from_variant(8, "L-2")),
-    ("P8 L-21b", from_variant(8, "L-21b")),
-    ("P16 L-2", from_variant(16, "L-2")),
-    ("P16 L-21b", from_variant(16, "L-21b")),
-    ("P32 L-2", from_variant(32, "L-2")),
-    ("P32 L-21b", from_variant(32, "L-21b")),
-    ("LogFxP-8", EulerConfig(width=8, mode="logfxp", stages=3)),
-    ("LogFxP-16", EulerConfig(width=16, mode="logfxp", stages=3)),
+    ("FP32", _uniform(EulerConfig(mode="exact"))),
+    ("Posit-8 exact", _uniform(EulerConfig(width=8, bounded=False, mode="posit"))),
+    ("Posit-16 exact", _uniform(EulerConfig(width=16, bounded=False, mode="posit"))),
+    ("Posit-32 exact", _uniform(EulerConfig(width=32, bounded=False, mode="posit"))),
+    ("P8 L-2", _uniform(from_variant(8, "L-2"))),
+    ("P8 L-21b", _uniform(from_variant(8, "L-21b"))),
+    ("P16 L-2", _uniform(from_variant(16, "L-2"))),
+    ("P16 L-21b", _uniform(from_variant(16, "L-21b"))),
+    ("P32 L-2", _uniform(from_variant(32, "L-2"))),
+    ("P32 L-21b", _uniform(from_variant(32, "L-21b"))),
+    ("LogFxP-8", _uniform(EulerConfig(width=8, mode="logfxp", stages=3))),
+    ("LogFxP-16", _uniform(EulerConfig(width=16, mode="logfxp", stages=3))),
+    # per-layer mixed precision (the SIMD-mode-switch analogue): the claim
+    # is it lands between uniform P8 and uniform P16
+    ("Mixed 8a/16m", _uniform(from_variant(16, "L-21b"))
+     .with_rule("*attn*", from_variant(8, "L-21b"))
+     .with_rule("*head*", EulerConfig(mode="exact"))),
 ]
 
 
@@ -119,9 +132,9 @@ def run(lm_steps=120):
     m, params, data = _train_lm(steps=lm_steps)
     mlp_p, fwd, x, y = _train_mlp()
     rows = []
-    for name, ecfg in CONFIGS:
-        lm = _lm_accuracy(m, params, data, ecfg)
-        mlp = _mlp_accuracy(mlp_p, fwd, x, y, ecfg)
+    for name, policy in CONFIGS:
+        lm = _lm_accuracy(m, params, data, policy)
+        mlp = _mlp_accuracy(mlp_p, fwd, x, y, policy)
         rows.append((name, lm, mlp))
     return rows
 

@@ -1,0 +1,64 @@
+"""Mixed per-layer posit precision through the unified numerics API.
+
+The paper's headline feature is a precision-RECONFIGURABLE datapath: one
+SIMD engine runs 4xPosit-8, 2xPosit-16 or 1xPosit-32.  A ``PrecisionPolicy``
+is that knob in software — here one model runs Posit-8 attention scores,
+Posit-16 MLPs and an exact FP32 LM head, through BOTH execution backends
+(the lax reference engine and the fused Pallas kernels) with matching
+outputs.
+
+  PYTHONPATH=src python examples/mixed_precision.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import numerics as N
+from repro.core.engine import EulerConfig, from_variant
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+
+CFG = ModelConfig(name="mixed", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                  loss_chunk=32, q_chunk=32, kv_chunk=32)
+
+# P8 attention + P16 MLP + exact head — three widths in one forward pass.
+policy = (N.PrecisionPolicy.uniform(from_variant(16, "L-21b"))
+          .with_rule("*attn*", from_variant(8, "L-21b"))
+          .with_rule("*head*", EulerConfig(mode="exact")))
+print("policy resolution:")
+for path, op in [("attn", "qk"), ("attn", "matmul"), ("mlp", "matmul"),
+                 ("head", "matmul")]:
+    cfg = policy.resolve(path, op)
+    print(f"  {path:5s}/{op:7s} -> {cfg.mode:>6s}"
+          + (f" posit{cfg.width}" if cfg.mode != "exact" else ""))
+
+model = Model(CFG, numerics=N.NumericsContext(policy=policy))
+params = model.init(jax.random.PRNGKey(0))
+ids = jnp.asarray(np.random.default_rng(0).integers(0, CFG.vocab, (2, 32)))
+
+from repro.models.layers import Ctx
+
+logits = {}
+for backend in ("lax_ref", "pallas"):
+    ctx = Ctx(numerics=N.NumericsContext(policy=policy, backend=backend))
+    h, _, _ = jax.jit(lambda p, x: model.forward(p, x, ctx))(params, ids)
+    logits[backend] = np.asarray(model.head(params, h, ctx))
+
+diff = np.abs(logits["lax_ref"] - logits["pallas"]).max()
+print(f"\nlax_ref vs pallas max |logit diff|: {diff:.2e}")
+assert diff < 1e-3, diff
+
+# the policy is live: a uniform-exact run must differ from the mixed run
+exact_ctx = Ctx(ecfg=EulerConfig(mode="exact"))
+h, _, _ = jax.jit(lambda p, x: model.forward(p, x, exact_ctx))(params, ids)
+le = np.asarray(model.head(params, h, exact_ctx))
+assert np.abs(le - logits["lax_ref"]).max() > 1e-6
+print("mixed-precision output differs from FP32 (policy is active)")
+
+# policies are plain data: JSON round-trip for configs / CLI flags
+import json
+blob = json.dumps(policy.to_dict())
+assert N.PrecisionPolicy.from_dict(json.loads(blob)) == policy
+print(f"policy JSON round-trip OK ({len(blob)} bytes)")
+print("mixed_precision OK")

@@ -1,11 +1,13 @@
 """Mini Table-VI: accuracy of one trained model evaluated under every
-EULER-ADAS operating point (post-training quantized inference).
+EULER-ADAS operating point (post-training quantized inference), plus a
+mixed-precision row driven by a PrecisionPolicy.
 
   PYTHONPATH=src python examples/precision_sweep.py
 """
 import jax
 import jax.numpy as jnp
 
+from repro import numerics as N
 from repro.core.engine import EulerConfig, from_variant, VARIANT_NAMES
 from repro.data import SyntheticLM
 from repro.models.config import ModelConfig
@@ -29,9 +31,13 @@ for i in range(150):
     state, out = step(state, data.batch(i, 8, 128))
 
 
-def top1(ecfg):
-    m = Model(CFG, ecfg)
-    c = Ctx(ecfg=ecfg)
+def top1(ecfg_or_policy):
+    if isinstance(ecfg_or_policy, N.PrecisionPolicy):
+        nctx = N.NumericsContext(policy=ecfg_or_policy)
+    else:
+        nctx = N.NumericsContext.from_ecfg(ecfg_or_policy)
+    m = Model(CFG, numerics=nctx)
+    c = Ctx(numerics=nctx)
     acc = n = 0
     for i in range(500, 503):
         b = data.batch(i, 8, 128)
@@ -50,4 +56,12 @@ for width in (8, 16, 32):
     for v in VARIANT_NAMES:
         a = top1(from_variant(width, v))
         print(f"{width:5d} {v:>7} {a:8.2f} {a - base:+9.2f}")
+
+# mixed per-layer precision: the knob the paper's SIMD mode switch exposes
+mixed = (N.PrecisionPolicy.uniform(from_variant(16, "L-21b"))
+         .with_rule("*attn*", from_variant(8, "L-21b"))
+         .with_rule("*head*", EulerConfig(mode="exact")))
+a = top1(mixed)
+print(f"{'mix':>5} {'8a/16m':>7} {a:8.2f} {a - base:+9.2f}"
+      "   (P8 attn + P16 mlp + exact head)")
 print("\nprecision_sweep OK")

@@ -6,6 +6,7 @@
 2. the stage-adaptive logarithmic multiplier and its error knobs
 3. euler_dot_general as a drop-in matmul for any JAX model
 4. the Pallas kernel path (posit patterns in, quire value out)
+5. the unified numerics API: one call, any precision policy, any backend
 """
 import jax
 import jax.numpy as jnp
@@ -52,4 +53,17 @@ quire_out = ops.logmac_matmul(pat_a, pat_b, cfg, bm=16, bn=16, bk=32)
 ref = euler_matmul(a[:32, :64], b[:64, :16], cfg.replace(pre_scale=False))
 print(f"kernel vs engine max abs diff: "
       f"{float(jnp.abs(quire_out - ref).max()):.2e}")
+
+# --- 5. the unified numerics API --------------------------------------------
+# One call signature over every backend; precision comes from the active
+# policy, so model code never threads an EulerConfig by hand.
+from repro import numerics as N
+
+with N.use(cfg):                       # uniform policy, lax reference engine
+    y_ref = N.matmul(a[:32, :64], b[:64, :16])
+with N.use(cfg, backend="pallas"):     # same call, fused Pallas kernels
+    y_pal = N.matmul(a[:32, :64], b[:64, :16])
+print(f"\nnumerics API lax_ref vs pallas: "
+      f"{float(jnp.abs(y_ref - y_pal).max()):.2e} "
+      f"(backends: {', '.join(N.available_backends())})")
 print("\nquickstart OK")

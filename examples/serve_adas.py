@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import numerics as N
 from repro.core.engine import EulerConfig, from_variant
 from repro.data import SyntheticLM
 from repro.models.config import ModelConfig
@@ -42,11 +43,21 @@ prompts = [rng.integers(0, CFG.vocab, int(rng.integers(8, 24)))
            for _ in range(8)]
 
 outputs = {}
-for name, ecfg in [("FP32", EulerConfig(mode="exact")),
-                   ("Posit16-exact", EulerConfig(width=16, mode="posit")),
-                   ("EULER L-21b", from_variant(16, "L-21b"))]:
-    m = Model(CFG, ecfg, remat=False)
-    eng = ServeEngine(m, state.params, Ctx(ecfg=ecfg), max_len=64, batch=4)
+MODES = [
+    ("FP32", N.PrecisionPolicy.uniform(EulerConfig(mode="exact"))),
+    ("Posit16-exact",
+     N.PrecisionPolicy.uniform(EulerConfig(width=16, mode="posit"))),
+    ("EULER L-21b", N.PrecisionPolicy.uniform(from_variant(16, "L-21b"))),
+    # mixed precision: cheap P8 attention, P16 MLP, exact head — the
+    # serving-time knob a PrecisionPolicy adds over a single EulerConfig
+    ("Mixed 8a/16m", N.PrecisionPolicy.uniform(from_variant(16, "L-21b"))
+     .with_rule("*attn*", from_variant(8, "L-21b"))
+     .with_rule("*head*", EulerConfig(mode="exact"))),
+]
+for name, policy in MODES:
+    nctx = N.NumericsContext(policy=policy)
+    m = Model(CFG, remat=False, numerics=nctx)
+    eng = ServeEngine(m, state.params, max_len=64, batch=4, numerics=nctx)
     batcher = RequestBatcher(eng, prompt_buckets=(32,))
     for p in prompts:
         batcher.submit(p, max_new=12)
@@ -57,7 +68,8 @@ for name, ecfg in [("FP32", EulerConfig(mode="exact")),
     print(f"{name:14s}: {len(res)} reqs, {12 * len(res) / dt:6.1f} tok/s")
 
 fp32 = outputs["FP32"]
-for name, toks in outputs.items():
+for name, _ in MODES:
+    toks = outputs[name]
     agree = (toks == fp32).mean()
     print(f"token agreement vs FP32 — {name}: {agree:.1%}")
 print("serve_adas OK")

@@ -12,7 +12,6 @@ from repro.core.engine import from_variant
 from repro.data import SyntheticLM
 from repro.distributed import checkpoint as CK
 from repro.models.config import ModelConfig
-from repro.models.layers import Ctx
 from repro.models.transformer import Model
 from repro.optim import AdamW, cosine_schedule
 from repro.training import init_state, make_train_step
@@ -23,7 +22,7 @@ CFG = ModelConfig(name="qat", family="dense", n_layers=2, d_model=128,
 
 ecfg = from_variant(16, "L-21b")          # the paper's headline config
 model = Model(CFG, ecfg)
-ctx = Ctx(ecfg=ecfg)
+ctx = model.make_ctx()                    # Ctx wired to the model's numerics
 opt = AdamW(lr=cosine_schedule(3e-3, 20, 200), weight_decay=0.0)
 state = init_state(model, opt, jax.random.PRNGKey(0))
 step = jax.jit(make_train_step(model, opt, ctx, grad_accum=2))

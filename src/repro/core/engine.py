@@ -29,6 +29,10 @@ Named variants (paper Tables I/II): ``L-1, L-2, L-21, L-22`` and bounded
   8       n=2        n=3         n=3,m=4        n=3,m=5
   16      n=4        n=6         n=6,m=8        n=6,m=10
   32      n=8        n=12        n=12,m=16      n=12,m=20
+
+NOTE: these functions are the "lax_ref" backend of ``repro.numerics`` — new
+code should go through ``repro.numerics`` (policy resolution + pluggable
+backends) instead of calling them directly.  Direct imports stay supported.
 """
 from __future__ import annotations
 
@@ -197,9 +201,7 @@ def euler_dot_general(a, b, dimension_numbers, cfg: EulerConfig,
 
 def euler_matmul(a, b, cfg: EulerConfig):
     """a @ b (contract last dim of a with first of b) under EULER numerics."""
-    nb = b.ndim
     dn = (((a.ndim - 1,), (0,)), ((), ()))
-    del nb
     return euler_dot_general(a, b, dn, cfg)
 
 

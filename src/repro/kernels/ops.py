@@ -18,7 +18,10 @@ from . import logmac as _logmac
 from . import posit_codec as _codec
 
 
+@functools.cache
 def _default_interpret() -> bool:
+    # cached: jax.default_backend() initializes the platform on first call
+    # and is not free per kernel launch; the backend is fixed per process
     return jax.default_backend() != "tpu"
 
 

@@ -13,8 +13,8 @@ import jax
 import numpy as np
 
 from repro import configs as C
-from repro.core.engine import EulerConfig, from_variant
 from repro.distributed import checkpoint as CK
+from repro.launch.train import build_numerics
 from repro.models.layers import Ctx
 from repro.models.transformer import Model
 from repro.serving import GenerationConfig, RequestBatcher, ServeEngine
@@ -26,6 +26,10 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--euler", default="L-21b")
     ap.add_argument("--width", type=int, default=16)
+    ap.add_argument("--policy", default="",
+                    help="PrecisionPolicy JSON (inline or file path)")
+    ap.add_argument("--backend", default="lax_ref",
+                    help="numerics backend: lax_ref | pallas | exact")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--requests", type=int, default=8)
@@ -37,9 +41,9 @@ def main(argv=None):
 
     mod = C.get_config(args.arch)
     cfg = mod.SMOKE if args.smoke else mod.FULL
-    ecfg = (EulerConfig(mode="exact") if args.euler == "exact"
-            else from_variant(args.width, args.euler))
-    model = Model(cfg, ecfg, remat=False)
+    nctx = build_numerics(args)
+    ecfg = nctx.policy.default
+    model = Model(cfg, ecfg, remat=False, numerics=nctx)
     params = model.init(jax.random.PRNGKey(args.seed))
     if args.ckpt_dir:
         from repro.training import TrainState
@@ -51,7 +55,7 @@ def main(argv=None):
         except Exception as e:  # noqa: BLE001
             print(f"no checkpoint loaded ({e}); serving random init")
 
-    ctx = Ctx(ecfg=ecfg)
+    ctx = Ctx(ecfg=ecfg, numerics=nctx)
     eng = ServeEngine(model, params, ctx, max_len=args.max_len,
                       batch=args.batch)
     batcher = RequestBatcher(eng, prompt_buckets=(32, 128))

@@ -28,22 +28,35 @@ from repro.distributed import sharding as SH
 from repro.launch.mesh import make_production_mesh
 from repro.models.layers import Ctx
 from repro.models.transformer import Model
+from repro.numerics import NumericsContext, PrecisionPolicy, load_policy
 from repro.optim import AdamW, cosine_schedule
 from repro.training import init_state, make_train_step
+
+
+def build_numerics(args) -> NumericsContext:
+    """--policy (JSON/file) wins; otherwise --euler/--width as a uniform
+    policy.  --backend picks the execution engine for every op."""
+    if getattr(args, "policy", None):
+        policy = load_policy(args.policy)
+    else:
+        if args.euler == "exact":
+            ecfg = EulerConfig(mode="exact")
+        else:
+            ecfg = from_variant(args.width, args.euler)
+        policy = PrecisionPolicy.uniform(ecfg)
+    return NumericsContext(policy=policy, backend=args.backend)
 
 
 def build(args):
     mod = C.get_config(args.arch)
     cfg = mod.SMOKE if args.smoke else mod.FULL
-    if args.euler == "exact":
-        ecfg = EulerConfig(mode="exact")
-    else:
-        ecfg = from_variant(args.width, args.euler)
+    nctx = build_numerics(args)
+    ecfg = nctx.policy.default
     mesh = None
     if args.mesh != "local":
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
-    model = Model(cfg, ecfg)
-    ctx = Ctx(ecfg=ecfg, mesh=mesh,
+    model = Model(cfg, ecfg, numerics=nctx)
+    ctx = Ctx(ecfg=ecfg, numerics=nctx, mesh=mesh,
               moe_fsdp=cfg.family == "moe" and cfg.n_experts >= 64)
     opt = AdamW(lr=cosine_schedule(args.lr, args.warmup, args.steps),
                 weight_decay=0.01)
@@ -65,6 +78,12 @@ def main(argv=None):
     ap.add_argument("--euler", default="L-21b",
                     help="variant name or 'exact'")
     ap.add_argument("--width", type=int, default=16)
+    ap.add_argument("--policy", default="",
+                    help="PrecisionPolicy JSON (inline or file path); "
+                         "overrides --euler/--width for per-layer precision")
+    ap.add_argument("--backend", default="lax_ref",
+                    help="numerics backend (lax_ref is the differentiable "
+                         "training path; pallas is forward-only)")
     ap.add_argument("--mesh", choices=["local", "single", "multi"],
                     default="local")
     ap.add_argument("--ckpt-dir", default="")

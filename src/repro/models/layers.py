@@ -1,13 +1,20 @@
-"""Composable layers.  Every matmul routes through the EULER-ADAS engine.
+"""Composable layers.  Every matmul routes through ``repro.numerics``.
 
 Functional style: ``*_init(key, ...) -> params dict`` and
-``*_apply(params, x, ctx) -> y``.  ``Ctx`` carries the EulerConfig, the mesh
-(for activation sharding constraints) and cache state for decoding.
+``*_apply(params, x, ctx) -> y``.  ``Ctx`` carries the ``NumericsContext``
+(precision policy + backend; a plain ``EulerConfig`` still works and is
+promoted to a uniform policy), the mesh (for activation sharding
+constraints) and cache state for decoding.
+
+Layer-path scopes for policy matching: attention traces under ``attn``, MLPs
+under ``mlp``, MoE under ``moe``, SSM under ``ssm`` (and the LM head under
+``head`` — see transformer.py), so a ``PrecisionPolicy`` rule like
+``("*attn*", P8)`` hits exactly the attention ops.
 
 Exact-path policy (paper Stage 5: "approximation is confined to mantissa
 multiplication; normalization, rounding and exception handling remain
 exact"): norms, softmax, RoPE, router logits and elementwise nonlinearities
-run in exact f32; all large matmuls run through ``euler_dot_general``.
+run in exact f32; all large matmuls run through ``repro.numerics``.
 """
 from __future__ import annotations
 
@@ -19,8 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
+from repro import numerics as N
 from repro.core import posit as _P
-from repro.core.engine import EulerConfig, euler_dot_general
+from repro.core.engine import EulerConfig
+from repro.numerics import NumericsContext
 
 
 def cache_encode(x, cache_dtype):
@@ -40,7 +49,8 @@ def cache_decode(x, out_dtype=jnp.bfloat16):
 
 @dataclasses.dataclass
 class Ctx:
-    ecfg: EulerConfig
+    ecfg: EulerConfig | None = None  # legacy uniform config (still honoured)
+    numerics: NumericsContext | None = None  # policy + backend (wins if set)
     mesh: Any = None                 # jax Mesh or None
     data_axes: tuple = ("pod", "data")
     model_axis: str = "model"
@@ -52,6 +62,17 @@ class Ctx:
                                      # full-T k/v all-gather — §Perf)
     moe_gather_dtype: Any = None     # cast expert weights before the ZeRO-3
                                      # all-gather (bf16 halves wire bytes)
+
+    def __post_init__(self):
+        # Bridge both configuration routes: a bare EulerConfig becomes a
+        # uniform policy; a NumericsContext back-fills ecfg for legacy
+        # readers (e.g. code branching on ctx.ecfg.mode).
+        if self.numerics is None:
+            self.numerics = NumericsContext.from_ecfg(
+                self.ecfg if self.ecfg is not None
+                else EulerConfig(mode="exact"))
+        if self.ecfg is None:
+            self.ecfg = self.numerics.policy.default
 
     def shard(self, x, *spec):
         if self.mesh is None:
@@ -70,11 +91,12 @@ class Ctx:
                      if self.mesh is not None and a in self.mesh.axis_names) or None
 
 
-def dot(a, b, ctx: Ctx, dn=None):
-    """EULER dot_general; default contracts a's last with b's first dim."""
+def dot(a, b, ctx: Ctx, dn=None, op: str = "matmul"):
+    """Policy-resolved dot_general; default contracts a's last with b's
+    first dim (op kind "matmul")."""
     if dn is None:
         dn = (((a.ndim - 1,), (0,)), ((), ()))
-    return euler_dot_general(a, b, dn, ctx.ecfg)
+    return N.dot_general(a, b, dn, ctx.numerics, op=op)
 
 
 # --------------------------------------------------------------------------
@@ -149,7 +171,7 @@ def _attn_scores(q, k, ctx: Ctx, softcap):
     group = H // KV
     qg = q.reshape(B, T, KV, group, hd)
     dn = (((4,), (3,)), ((0, 2), (0, 2)))  # contract hd; batch B, KV
-    s = euler_dot_general(qg, k, dn, ctx.ecfg)      # [B, KV, T, group, S]
+    s = N.dot_general(qg, k, dn, ctx.numerics, op="qk")  # [B,KV,T,group,S]
     s = s * (hd ** -0.5)
     s = _softcap(s.astype(jnp.float32), softcap)
     return s  # [B, KV, T, group, S]
@@ -158,7 +180,7 @@ def _attn_scores(q, k, ctx: Ctx, softcap):
 def _attn_values(p, v, ctx: Ctx):
     # p: [B, KV, T, group, S], v: [B, S, KV, hd] -> [B, T, KV*group*hd]
     dn = (((4,), (1,)), ((0, 1), (0, 2)))
-    o = euler_dot_general(p, v, dn, ctx.ecfg)       # [B, KV, T, group, hd]
+    o = N.dot_general(p, v, dn, ctx.numerics, op="pv")  # [B,KV,T,group,hd]
     B, KV, T, group, hd = o.shape
     return jnp.moveaxis(o, 1, 2).reshape(B, T, KV * group * hd)
 
@@ -182,6 +204,7 @@ def _maybe_qk_norm(p, q, k):
     return q, k
 
 
+@N.scoped("attn")
 def attention_apply(p, x, ctx: Ctx, cfg, window, positions,
                     cache=None, q_chunk: int = 1024, kv_chunk: int = 1024):
     """Full attention layer.
@@ -268,7 +291,8 @@ def attention_apply(p, x, ctx: Ctx, cfg, window, positions,
             pexp = jnp.exp(s - m_new[..., None])
             l_new = l_run * alpha + pexp.sum(-1)
             dn = (((4,), (1,)), ((0, 1), (0, 2)))
-            o = euler_dot_general(pexp.astype(v_i.dtype), v_i, dn, ctx.ecfg)
+            o = N.dot_general(pexp.astype(v_i.dtype), v_i, dn, ctx.numerics,
+                              op="pv")
             acc = acc * alpha[..., None] + o
             return (m_new, l_new, acc), None
 
@@ -313,6 +337,7 @@ def mlp_init(key, cfg, d_ff=None):
     return {"wi": dense_init(ks[0], d, f), "wo": dense_init(ks[2], f, d)}
 
 
+@N.scoped("mlp")
 def mlp_apply(p, x, ctx: Ctx, kind: str):
     h = dense_apply(p["wi"], x, ctx)
     if kind == "silu_gated":
@@ -348,7 +373,7 @@ def moe_init(key, cfg):
 
 
 def _moe_expert_block(xl, il, gl, wi, wg, wo, *, e0, E_local: int, cap: int,
-                      ecfg, gather_axes=None, gather_dtype=None):
+                      nctx, gather_axes=None, gather_dtype=None):
     """Per-device expert block: dispatch my tokens to MY experts, run the
     expert FFN, combine back to token order.  Used both as the single-device
     path (e0=0, E_local=E) and as the shard_map body (e0=axis_index*E_local,
@@ -388,10 +413,10 @@ def _moe_expert_block(xl, il, gl, wi, wg, wo, *, e0, E_local: int, cap: int,
             wi, wg, wo = jax.lax.optimization_barrier((wi, wg, wo))
 
     dnb = (((2,), (1,)), ((0,), (0,)))
-    h = euler_dot_general(buf, wi, dnb, ecfg)
-    g = euler_dot_general(buf, wg, dnb, ecfg)
+    h = N.dot_general(buf, wi, dnb, nctx, op="matmul")
+    g = N.dot_general(buf, wg, dnb, nctx, op="matmul")
     h = jax.nn.silu(g) * h
-    out = euler_dot_general(h, wo, dnb, ecfg)                  # [E_l, cap, d]
+    out = N.dot_general(h, wo, dnb, nctx, op="matmul")         # [E_l, cap, d]
 
     gathered = out[jnp.where(keep, flat_e, 0), jnp.where(keep, rank, 0)]
     gathered = jnp.where(keep[:, None], gathered, 0.0)
@@ -399,6 +424,7 @@ def _moe_expert_block(xl, il, gl, wi, wg, wo, *, e0, E_local: int, cap: int,
     return y.at[tok_idx].add(gathered * gl.reshape(-1)[:, None])
 
 
+@N.scoped("moe")
 def moe_apply(p, x, ctx: Ctx, cfg):
     """Top-k MoE, expert-parallel, explicit collective schedule:
 
@@ -440,7 +466,7 @@ def moe_apply(p, x, ctx: Ctx, cfg):
             e0 = (jax.lax.axis_index(ma) * E_local) if msz > 1 else 0
             y = _moe_expert_block(
                 xl, il, gl, wi, wg, wo, e0=e0, E_local=E_local, cap=cap,
-                ecfg=ctx.ecfg, gather_axes=da if fsdp else None,
+                nctx=ctx.numerics, gather_axes=da if fsdp else None,
                 gather_dtype=ctx.moe_gather_dtype)
             if msz > 1:
                 y = jax.lax.psum(y, ma)
@@ -458,7 +484,7 @@ def moe_apply(p, x, ctx: Ctx, cfg):
     else:
         y = _moe_expert_block(xt, ids, gates, p["wi"]["w"], p["wg"]["w"],
                               p["wo"]["w"], e0=0, E_local=E, cap=cap,
-                              ecfg=ctx.ecfg)
+                              nctx=ctx.numerics)
 
     if cfg.moe_dense_residual:
         y = y + mlp_apply(p["dense"], xt, ctx, "silu_gated")

@@ -4,7 +4,7 @@ Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060): the
 sequence is split into chunks of length Q; within a chunk the recurrence is
 computed as a masked attention-like matmul (the "dual" form), across chunks a
 short ``lax.scan`` carries the [H, N, P] state.  All O(T·Q) / O(T·N·P)
-contractions route through ``euler_dot_general`` so the paper's approximate
+contractions route through ``repro.numerics`` so the paper's approximate
 MAC datapath covers the SSM family too; the cross-chunk *state accumulation*
 stays exact f32 — it is the quire analogue (DESIGN.md §5).
 
@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import euler_dot_general
+from repro import numerics as NU  # 'N' is the SSM state dim locally
 
 from .layers import Ctx, dense_init, dense_apply
 
@@ -103,7 +103,7 @@ def ssd_chunked(x, dt, A, Bm, Cm, ctx: Ctx, chunk: int, initial_state=None):
         cum = jnp.cumsum(dA, axis=1)
         # intra-chunk dual form: scores[i,j] = C_i · B_j (EULER-quantized)
         dn = (((2,), (2,)), ((0,), (0,)))
-        scores = euler_dot_general(Cq, Bq, dn, ctx.ecfg)       # [B,Qi,Qj]
+        scores = NU.dot_general(Cq, Bq, dn, ctx.numerics, op="qk")  # [B,Qi,Qj]
         # mask the log-decay BEFORE exp: masked entries are exp(+large) and
         # inf forward values poison the backward (where-grad trap)
         ldiff = cum[:, :, None, :] - cum[:, None, :, :]        # [B,Qi,Qj,H]
@@ -113,19 +113,19 @@ def ssd_chunked(x, dt, A, Bm, Cm, ctx: Ctx, chunk: int, initial_state=None):
         xdt = xq * dtq[..., None]                              # [B,Q,H,P]
         # y_intra[i,h,p] = sum_j M[i,j,h] xdt[j,h,p]
         dn2 = (((3,), (1,)), ((0, 1), (0, 2)))  # lhs [B,H,Qi,Qj] rhs [B,Qj,H,P]
-        y_intra = euler_dot_general(jnp.moveaxis(M, -1, 1), xdt, dn2,
-                                    ctx.ecfg)                  # [B,H,Qi,P]
+        y_intra = NU.dot_general(jnp.moveaxis(M, -1, 1), xdt, dn2,
+                                 ctx.numerics, op="pv")        # [B,H,Qi,P]
         y_intra = jnp.moveaxis(y_intra, 1, 2)                  # [B,Qi,H,P]
         # inter-chunk: y_inter[i] = exp(cum_i) * (C_i · S_in)
         dn3 = (((2,), (1,)), ((0,), (0,)))  # Cq [B,Q,N] x S_in→[B,N,H,P]
-        y_inter = euler_dot_general(
-            Cq, jnp.moveaxis(S_in, 1, 2), dn3, ctx.ecfg)       # [B,Q,H,P]
+        y_inter = NU.dot_general(
+            Cq, jnp.moveaxis(S_in, 1, 2), dn3, ctx.numerics)   # [B,Q,H,P]
         y_inter = y_inter * jnp.exp(cum)[..., None]
         # state update: S_out = decay * S_in + sum_j B_j ⊗ (w_j x_j)
         decay_out = jnp.exp(cum[:, -1:, :] - cum)              # [B,Q,H]
         w = xdt * decay_out[..., None]                         # [B,Q,H,P]
         dn4 = (((1,), (1,)), ((0,), (0,)))  # contract Q
-        S_chunk = euler_dot_general(Bq, w, dn4, ctx.ecfg)      # [B,N,H,P]
+        S_chunk = NU.dot_general(Bq, w, dn4, ctx.numerics)     # [B,N,H,P]
         S_chunk = jnp.moveaxis(S_chunk, 1, 2)                  # [B,H,N,P]
         chunk_decay = jnp.exp(cum[:, -1, :])                   # [B,H]
         S_out = S_in * chunk_decay[:, :, None, None] + S_chunk
@@ -140,6 +140,7 @@ def ssd_chunked(x, dt, A, Bm, Cm, ctx: Ctx, chunk: int, initial_state=None):
     return y, S_final
 
 
+@NU.scoped("ssm")
 def ssm_apply(p, x, ctx: Ctx, cfg, cache=None):
     """Full Mamba-2 mixer.  cache=None → chunked prefill/train over [B,T,d];
     cache={"state","conv"} with ctx.decode_pos → single-token decode."""

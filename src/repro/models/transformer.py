@@ -29,7 +29,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import EulerConfig, euler_dot_general
+from repro import numerics as N
+from repro.core.engine import EulerConfig
+from repro.numerics import NumericsContext
 
 from . import layers as L
 from . import ssm as S
@@ -53,12 +55,21 @@ class Model:
     """init / loss / prefill / decode_step for one ModelConfig."""
 
     def __init__(self, cfg: ModelConfig, ecfg: EulerConfig | None = None,
-                 remat: bool = True, remat_policy: str = "nothing"):
+                 remat: bool = True, remat_policy: str = "nothing",
+                 numerics: NumericsContext | None = None):
         self.cfg = cfg
-        self.ecfg = ecfg or EulerConfig(mode="exact")
+        if numerics is None:
+            numerics = NumericsContext.from_ecfg(
+                ecfg or EulerConfig(mode="exact"))
+        self.numerics = numerics
+        self.ecfg = ecfg or numerics.policy.default
         self.remat = remat
         self.remat_policy = remat_policy
         self.compute_dtype = jnp.dtype(cfg.dtype)
+
+    def make_ctx(self, **kw) -> Ctx:
+        """A Ctx pre-wired with this model's numerics (mesh etc. via kw)."""
+        return Ctx(ecfg=self.ecfg, numerics=self.numerics, **kw)
 
     # ------------------------------------------------------------------
     # Parameter init
@@ -242,7 +253,10 @@ class Model:
                 p_l = jax.tree.map(lambda a: a[i], params["layers"])
                 c_l = (None if cache is None
                        else jax.tree.map(lambda a: a[i], cache))
-                x, c_new, a = block(p_l, x, windows[i], c_l)
+                # unscanned stacks get a per-layer path component, so
+                # policies can pin precision by depth ("layer0/*", ...)
+                with N.scope(f"layer{i}"):
+                    x, c_new, a = block(p_l, x, windows[i], c_l)
                 aux = aux + a
                 new_caches.append(c_new)
             new_cache = (None if cache is None else
@@ -260,7 +274,9 @@ class Model:
         cfg = self.cfg
         emb = params["embed"]["e"].astype(h.dtype)
         dn = (((h.ndim - 1,), (1,)), ((), ()))
-        logits = euler_dot_general(h, emb, dn, ctx.ecfg).astype(jnp.float32)
+        with N.scope("head"):
+            logits = N.dot_general(h, emb, dn, ctx.numerics,
+                                   op="matmul").astype(jnp.float32)
         if cfg.logit_softcap:
             logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
         if cfg.vocab_padded > cfg.vocab:  # mask padded vocab slots

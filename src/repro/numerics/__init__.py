@@ -1,0 +1,32 @@
+"""Unified numerics API for the EULER-ADAS engine.
+
+One dispatch point for every matmul-shaped op in the repo:
+
+  * :class:`PrecisionPolicy` — (layer-path pattern, op kind) -> EulerConfig,
+    dict-serializable; expresses mixed-precision models (P8 attention,
+    P16 MLP, exact head) mirroring the paper's SIMD mode switching.
+  * backend registry — "exact" | "lax_ref" | "pallas" (+ user-registered),
+    all sharing the op-set protocol, so the fused Pallas kernels are
+    reachable from models/serving/benchmarks through the same signature as
+    the lax reference path.
+  * :class:`NumericsContext` / :func:`use` / :func:`scope` — explicit
+    (jit-safe) and ambient (trace-time) resolution.
+
+See README.md "The numerics API" for a tour.
+"""
+from .policy import (OP_KINDS, PolicyRule, PrecisionPolicy, ecfg_from_dict,
+                     ecfg_to_dict, load_policy)
+from .backends import (Backend, ExactBackend, LaxRefBackend, PallasBackend,
+                       available_backends, get_backend, register_backend)
+from .api import (DEFAULT, NumericsContext, current, current_path,
+                  dot_general, elementwise, matmul, pv, qk, resolve, scope,
+                  scoped, use)
+
+__all__ = [
+    "OP_KINDS", "PolicyRule", "PrecisionPolicy", "ecfg_from_dict",
+    "ecfg_to_dict", "load_policy",
+    "Backend", "ExactBackend", "LaxRefBackend", "PallasBackend",
+    "available_backends", "get_backend", "register_backend",
+    "DEFAULT", "NumericsContext", "current", "current_path", "dot_general",
+    "elementwise", "matmul", "pv", "qk", "resolve", "scope", "scoped", "use",
+]

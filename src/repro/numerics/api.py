@@ -1,0 +1,197 @@
+"""The unified numerics entry point: context-scoped policy + backend.
+
+Every matmul-shaped op in the repo funnels through the module-level ops here
+(``dot_general``/``matmul``/``qk``/``pv``/``elementwise``).  Each call
+resolves (active layer path, op kind) against the active
+:class:`PrecisionPolicy` and dispatches to the active backend:
+
+    policy = (PrecisionPolicy.uniform(from_variant(16, "L-21b"))
+              .with_rule("*attn*", from_variant(8, "L-21b"))
+              .with_rule("*head*", EulerConfig(mode="exact")))
+    with numerics.use(policy, backend="pallas"):
+        y = model_forward(params, x)          # mixed P8/P16/exact
+
+Two resolution routes:
+
+  * ambient — ``use(...)`` pushes a :class:`NumericsContext` on a trace-time
+    stack; ops with no explicit context read the top of the stack.  Scoping
+    is trace-time: keep the ``with`` active while jit traces (re-traces see
+    whatever is active then, so vary policies OUTSIDE jitted functions).
+  * explicit — pass a ``NumericsContext`` to the op (what ``models.layers.Ctx``
+    does).  The context is frozen/hashable, closes over jitted functions
+    safely, and is the jit-proof route for long-lived models.
+
+Layer paths come from ``scope(name)`` context managers placed in the model
+code ("attn", "mlp", "moe", "ssm", "head", ...); they nest with "/".
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import threading
+
+from repro.core.engine import EulerConfig
+
+from .backends import Backend, get_backend
+from .policy import PrecisionPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsContext:
+    """Frozen (policy, backend) pair — the unit of numerics configuration."""
+
+    policy: PrecisionPolicy = dataclasses.field(
+        default_factory=PrecisionPolicy)
+    backend: str = "lax_ref"
+
+    @classmethod
+    def from_ecfg(cls, ecfg: EulerConfig,
+                  backend: str = "lax_ref") -> "NumericsContext":
+        """Uniform single-config context (the legacy ``ctx.ecfg`` shape)."""
+        return cls(policy=PrecisionPolicy.uniform(ecfg), backend=backend)
+
+    def cfg_for(self, path: str, op: str = "dot_general") -> EulerConfig:
+        return self.policy.resolve(path, op)
+
+    def to_dict(self) -> dict:
+        return {"policy": self.policy.to_dict(), "backend": self.backend}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "NumericsContext":
+        return cls(policy=PrecisionPolicy.from_dict(d.get("policy", {})),
+                   backend=d.get("backend", "lax_ref"))
+
+
+DEFAULT = NumericsContext()
+
+_TLS = threading.local()
+
+
+def _ctx_stack() -> list:
+    if not hasattr(_TLS, "ctx"):
+        _TLS.ctx = []
+    return _TLS.ctx
+
+
+def _scope_stack() -> list:
+    if not hasattr(_TLS, "scope"):
+        _TLS.scope = []
+    return _TLS.scope
+
+
+def current() -> NumericsContext:
+    """The active ambient context (``DEFAULT`` = exact/lax_ref outside any
+    ``use(...)`` block)."""
+    stack = _ctx_stack()
+    return stack[-1] if stack else DEFAULT
+
+
+def current_path() -> str:
+    """The active layer path ("/"-joined open scopes; "" at top level)."""
+    return "/".join(_scope_stack())
+
+
+@contextlib.contextmanager
+def use(policy_or_ctx, backend: str | None = None):
+    """Activate a policy/context for the dynamic (trace-time) extent.
+
+    Accepts a ``NumericsContext``, a ``PrecisionPolicy``, or a bare
+    ``EulerConfig`` (treated as a uniform policy).  ``backend`` overrides the
+    context's backend when given.
+    """
+    if isinstance(policy_or_ctx, NumericsContext):
+        ctx = policy_or_ctx
+    elif isinstance(policy_or_ctx, PrecisionPolicy):
+        ctx = NumericsContext(policy=policy_or_ctx)
+    elif isinstance(policy_or_ctx, EulerConfig):
+        ctx = NumericsContext.from_ecfg(policy_or_ctx)
+    else:
+        raise TypeError(f"cannot activate {type(policy_or_ctx).__name__}")
+    if backend is not None:
+        ctx = dataclasses.replace(ctx, backend=backend)
+    stack = _ctx_stack()
+    stack.append(ctx)
+    try:
+        yield ctx
+    finally:
+        stack.pop()
+
+
+@contextlib.contextmanager
+def scope(name: str):
+    """Push a layer-path component for policy pattern matching."""
+    stack = _scope_stack()
+    stack.append(name)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def scoped(name: str):
+    """Decorator form of :func:`scope` — the whole function body traces under
+    the given layer-path component."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with scope(name):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco
+
+
+def resolve(op: str = "dot_general", path: str | None = None,
+            ctx: NumericsContext | None = None) -> EulerConfig:
+    """The EulerConfig an op issued here-and-now would run under."""
+    nctx = ctx if ctx is not None else current()
+    p = path if path is not None else current_path()
+    return nctx.cfg_for(p, op)
+
+
+def _dispatch(op: str, ctx: NumericsContext | None, path: str | None):
+    nctx = ctx if ctx is not None else current()
+    p = path if path is not None else current_path()
+    return get_backend(nctx.backend), nctx.cfg_for(p, op)
+
+
+# --------------------------------------------------------------------------
+# The op set
+# --------------------------------------------------------------------------
+
+def dot_general(a, b, dimension_numbers, ctx: NumericsContext | None = None,
+                *, op: str = "dot_general", path: str | None = None):
+    """``lax.dot_general`` under the active policy/backend.
+
+    ``op`` tags the call for policy resolution ("qk"/"pv" for attention
+    contractions with custom dimension numbers, "matmul" for plain
+    projections) without changing execution semantics.
+    """
+    backend, cfg = _dispatch(op, ctx, path)
+    return backend.dot_general(a, b, dimension_numbers, cfg)
+
+
+def matmul(a, b, ctx: NumericsContext | None = None, *,
+           path: str | None = None):
+    """a @ b (contract a's last dim with b's first) under the active policy."""
+    backend, cfg = _dispatch("matmul", ctx, path)
+    return backend.matmul(a, b, cfg)
+
+
+def qk(q, k, ctx: NumericsContext | None = None, *, path: str | None = None):
+    """Attention scores q·k^T over the last dim: [..., T, D] x [..., S, D]."""
+    backend, cfg = _dispatch("qk", ctx, path)
+    return backend.qk(q, k, cfg)
+
+
+def pv(p, v, ctx: NumericsContext | None = None, *, path: str | None = None):
+    """Attention values p·v: [..., T, S] x [..., S, D]."""
+    backend, cfg = _dispatch("pv", ctx, path)
+    return backend.pv(p, v, cfg)
+
+
+def elementwise(a, b, ctx: NumericsContext | None = None, *,
+                path: str | None = None):
+    """Elementwise EULER product (SSD state-update path)."""
+    backend, cfg = _dispatch("elementwise", ctx, path)
+    return backend.elementwise(a, b, cfg)

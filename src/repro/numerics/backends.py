@@ -1,0 +1,187 @@
+"""Pluggable numerics backends behind a string registry.
+
+A backend executes the op set (``dot_general``, ``matmul``, ``qk``, ``pv``,
+``elementwise``) under a given :class:`~repro.core.engine.EulerConfig`.  All
+backends share one call signature, so models/serving/benchmarks pick their
+execution engine by name:
+
+  "exact"    FP32 ``lax.dot_general`` — ignores the config's approximation
+             knobs entirely (golden reference).
+  "lax_ref"  the pure-lax reference engine (``repro.core.engine``): posit
+             quantization + two-plane ILM as composable jnp ops.  Fully
+             differentiable (STE) — the training path.
+  "pallas"   the fused Pallas kernels (``repro.kernels.ops``): posit codec +
+             logmac matmul in two kernel launches (interpret mode off-TPU).
+             Forward/inference path; ops the kernels do not cover (batched
+             dot_generals, non-"euler" modes, elementwise) fall back to the
+             reference engine so any model runs end-to-end.
+
+``register_backend`` adds new engines (e.g. a future TPU-native or GPU
+backend) without touching any call site.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import posit as _P
+from repro.core import engine as _E
+from repro.core.engine import EulerConfig
+
+
+class Backend:
+    """Op-set protocol.  Subclasses must implement ``dot_general`` and
+    ``elementwise``; the named ops default to dot_general with the canonical
+    dimension numbers and may be overridden for fused implementations."""
+
+    name = "base"
+
+    # -- required ---------------------------------------------------------
+
+    def dot_general(self, a, b, dimension_numbers, cfg: EulerConfig):
+        raise NotImplementedError
+
+    def elementwise(self, a, b, cfg: EulerConfig):
+        raise NotImplementedError
+
+    # -- derived ----------------------------------------------------------
+
+    def matmul(self, a, b, cfg: EulerConfig):
+        """a @ b: contract a's last dim with b's first."""
+        dn = (((a.ndim - 1,), (0,)), ((), ()))
+        return self.dot_general(a, b, dn, cfg)
+
+    def qk(self, q, k, cfg: EulerConfig):
+        """Attention scores over the last dim: [..., T, D] x [..., S, D]."""
+        nd = q.ndim
+        batch = tuple(range(nd - 2))
+        dn = (((nd - 1,), (nd - 1,)), (batch, batch))
+        return self.dot_general(q, k, dn, cfg)
+
+    def pv(self, p, v, cfg: EulerConfig):
+        """Attention values: [..., T, S] x [..., S, D]."""
+        nd = p.ndim
+        batch = tuple(range(nd - 2))
+        dn = (((nd - 1,), (nd - 2,)), (batch, batch))
+        return self.dot_general(p, v, dn, cfg)
+
+
+class ExactBackend(Backend):
+    """FP32 reference: every op runs exact regardless of the config."""
+
+    name = "exact"
+
+    def dot_general(self, a, b, dimension_numbers, cfg: EulerConfig):
+        return _E.euler_dot_general(a, b, dimension_numbers,
+                                    cfg.replace(mode="exact"))
+
+    def elementwise(self, a, b, cfg: EulerConfig):
+        return a * b
+
+
+class LaxRefBackend(Backend):
+    """The composable-jnp reference engine (differentiable, STE grads)."""
+
+    name = "lax_ref"
+
+    def dot_general(self, a, b, dimension_numbers, cfg: EulerConfig):
+        return _E.euler_dot_general(a, b, dimension_numbers, cfg)
+
+    def elementwise(self, a, b, cfg: EulerConfig):
+        return _E.ilm_elementwise(a, b, cfg)
+
+
+def _single_contraction(a, b, dimension_numbers):
+    """((perm'd a, perm'd b) | None: operands reordered so the one
+    contracting dim is a's last / b's first — the fused kernel's layout."""
+    (lc, rc), (lb, rb) = dimension_numbers
+    if lb or rb or len(lc) != 1 or len(rc) != 1:
+        return None
+    la, ra = lc[0], rc[0]
+    perm_a = tuple(d for d in range(a.ndim) if d != la) + (la,)
+    perm_b = (ra,) + tuple(d for d in range(b.ndim) if d != ra)
+    return jnp.transpose(a, perm_a), jnp.transpose(b, perm_b)
+
+
+def _tile(extent: int, cap: int = 128) -> int:
+    """Kernel tile: hardware-aligned 128 cap, shrunk (8-multiple) for small
+    extents so interpret mode does not pad tiny ops to full MXU tiles."""
+    return min(cap, max(8, -(-extent // 8) * 8))
+
+
+class PallasBackend(LaxRefBackend):
+    """Fused posit-codec + logmac kernel path (forward/inference).
+
+    Covers single-contraction, batch-free dot_generals in ``mode="euler"``
+    (the paper's engine mode); everything else falls back to the reference
+    engine.  ``pre_scale``/``out_quant`` are applied around the kernel with
+    the exact same math as the reference path, so both backends agree within
+    kernel tolerance.
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None,
+                 bm: int | None = None, bn: int | None = None,
+                 bk: int | None = None):
+        self.interpret = interpret
+        self.bm, self.bn, self.bk = bm, bn, bk
+
+    def dot_general(self, a, b, dimension_numbers, cfg: EulerConfig):
+        if cfg.mode != "euler":
+            return super().dot_general(a, b, dimension_numbers, cfg)
+        pair = _single_contraction(a, b, dimension_numbers)
+        if pair is None:
+            return super().dot_general(a, b, dimension_numbers, cfg)
+        from repro.kernels import ops as _K  # deferred: keeps core import-light
+        a2, b2 = pair
+        K = a2.shape[-1]
+        if K != b2.shape[0] or a2.size == 0 or b2.size == 0:
+            return super().dot_general(a, b, dimension_numbers, cfg)
+        lhs_free, rhs_free = a2.shape[:-1], b2.shape[1:]
+        M = int(np.prod(lhs_free)) if lhs_free else 1
+        N = int(np.prod(rhs_free)) if rhs_free else 1
+        af = a2.reshape(M, K).astype(jnp.float32)
+        bf = b2.reshape(K, N).astype(jnp.float32)
+        if cfg.pre_scale:  # same per-tensor power-of-2 centering as the engine
+            sa, sb = _E._pow2_scale(af), _E._pow2_scale(bf)
+            af, bf = af / sa, bf / sb
+        out = _K.euler_matmul_fused(
+            af, bf, cfg, interpret=self.interpret,
+            bm=self.bm or _tile(M), bn=self.bn or _tile(N),
+            bk=self.bk or _tile(K))
+        if cfg.pre_scale:
+            out = out * (sa * sb)
+        if cfg.out_quant:
+            out = _P.quantize(out, cfg.posit)
+        return out.reshape(lhs_free + rhs_free).astype(cfg.dtype)
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(name: str, backend: Backend) -> Backend:
+    """Register (or replace) a backend instance under ``name``."""
+    _BACKENDS[name] = backend
+    return backend
+
+
+def get_backend(name: str | Backend) -> Backend:
+    """Look up a backend by name (instances pass through unchanged)."""
+    if isinstance(name, Backend):
+        return name
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown numerics backend {name!r}; "
+                       f"available: {sorted(_BACKENDS)}") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+register_backend("exact", ExactBackend())
+register_backend("lax_ref", LaxRefBackend())
+register_backend("pallas", PallasBackend())

@@ -1,0 +1,175 @@
+"""Precision policies: (layer-path pattern, op kind) -> EulerConfig.
+
+A ``PrecisionPolicy`` is the software analogue of the paper's SIMD mode
+switching: the same unified datapath runs 4xPosit-8, 2xPosit-16 or 1xPosit-32
+per cycle, and the policy decides which width each op of the model uses —
+e.g. Posit-8 attention scores, Posit-16 MLPs, exact LM head.
+
+Rules are matched against the *layer path*, a "/"-joined string of the
+``numerics.scope(...)`` names active at trace time (``"attn"``, ``"mlp"``,
+``"head"``, ``"layer3/attn"``, ...), and the *op kind* (one of ``OP_KINDS``).
+Matching uses ``fnmatch`` patterns.  Precedence among matching rules:
+
+  1. a rule naming the op kind explicitly beats an any-op rule;
+  2. a more specific pattern (more non-wildcard characters) beats a less
+     specific one;
+  3. the later rule wins ties.
+
+``PrecisionPolicy`` round-trips through plain dicts (``to_dict`` /
+``from_dict``) so policies live in JSON configs and CLI flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import functools
+
+from repro.core.engine import EulerConfig, from_variant
+
+OP_KINDS = ("dot_general", "matmul", "qk", "pv", "elementwise")
+
+
+# --------------------------------------------------------------------------
+# EulerConfig <-> dict
+# --------------------------------------------------------------------------
+
+_DTYPE_FIELD = "dtype"
+
+
+def ecfg_to_dict(cfg: EulerConfig) -> dict:
+    """Plain-dict form of an EulerConfig (dtype stored by name)."""
+    d = dataclasses.asdict(cfg)
+    import jax.numpy as jnp
+    d[_DTYPE_FIELD] = jnp.dtype(cfg.dtype).name
+    return d
+
+
+def ecfg_from_dict(d: dict) -> EulerConfig:
+    """Inverse of :func:`ecfg_to_dict`.
+
+    Also accepts the compact variant form ``{"width": 16, "variant":
+    "L-21b", ...}`` (extra keys become overrides) and the shorthand
+    ``{"mode": "exact"}``.
+    """
+    import jax.numpy as jnp
+    d = dict(d)
+    if _DTYPE_FIELD in d:
+        d[_DTYPE_FIELD] = jnp.dtype(d[_DTYPE_FIELD])
+    if "variant" in d:
+        variant = d.pop("variant")
+        width = d.pop("width", 16)
+        return from_variant(width, variant, **d)
+    return EulerConfig(**d)
+
+
+# --------------------------------------------------------------------------
+# Rules and policies
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """One (pattern, op) -> config binding; ``op=None`` matches any op."""
+
+    pattern: str
+    cfg: EulerConfig
+    op: str | None = None
+
+    def __post_init__(self):
+        if self.op is not None and self.op not in OP_KINDS:
+            raise ValueError(f"unknown op kind {self.op!r}; one of {OP_KINDS}")
+
+    def matches(self, path: str, op: str) -> bool:
+        if self.op is not None and self.op != op:
+            return False
+        return fnmatch.fnmatchcase(path, self.pattern)
+
+    @property
+    def specificity(self) -> int:
+        """Literal character count — more literal = more specific."""
+        return sum(1 for c in self.pattern if c not in "*?[]")
+
+    def to_dict(self) -> dict:
+        d = {"pattern": self.pattern, "cfg": ecfg_to_dict(self.cfg)}
+        if self.op is not None:
+            d["op"] = self.op
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PolicyRule":
+        return cls(pattern=d["pattern"], cfg=ecfg_from_dict(d["cfg"]),
+                   op=d.get("op"))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Mapping (layer path, op kind) -> EulerConfig with a default fallback.
+
+    Frozen and hashable, so it can be closed over by jitted functions and
+    memoized: resolution happens at trace time and costs nothing per step.
+    """
+
+    default: EulerConfig = dataclasses.field(
+        default_factory=lambda: EulerConfig(mode="exact"))
+    rules: tuple[PolicyRule, ...] = ()
+
+    def __post_init__(self):
+        if not isinstance(self.rules, tuple):
+            object.__setattr__(self, "rules", tuple(self.rules))
+
+    def resolve(self, path: str, op: str = "dot_general") -> EulerConfig:
+        """Best-matching config for (path, op); the default if none match."""
+        if op not in OP_KINDS:
+            raise ValueError(f"unknown op kind {op!r}; one of {OP_KINDS}")
+        return _resolve_cached(self, path, op)
+
+    def with_rule(self, pattern: str, cfg: EulerConfig,
+                  op: str | None = None) -> "PrecisionPolicy":
+        """New policy with one rule appended (later rules win ties)."""
+        return dataclasses.replace(
+            self, rules=self.rules + (PolicyRule(pattern, cfg, op),))
+
+    @classmethod
+    def uniform(cls, cfg: EulerConfig) -> "PrecisionPolicy":
+        """Single-config policy — the old ``ctx.ecfg`` behaviour."""
+        return cls(default=cfg)
+
+    # -- serialization ----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {"default": ecfg_to_dict(self.default),
+                "rules": [r.to_dict() for r in self.rules]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PrecisionPolicy":
+        default = (ecfg_from_dict(d["default"]) if "default" in d
+                   else EulerConfig(mode="exact"))
+        rules = tuple(PolicyRule.from_dict(r) for r in d.get("rules", ()))
+        return cls(default=default, rules=rules)
+
+
+def load_policy(spec: str) -> PrecisionPolicy:
+    """Build a policy from a CLI-style spec: a path to a JSON file, or
+    inline JSON (the ``to_dict`` schema)."""
+    import json
+    import os
+    if os.path.isfile(spec):
+        with open(spec) as f:
+            return PrecisionPolicy.from_dict(json.load(f))
+    if not spec.lstrip().startswith(("{", "[")):
+        # looks like a file path, not inline JSON — fail with the real cause
+        # instead of a JSONDecodeError at column 1
+        raise FileNotFoundError(f"policy file not found: {spec}")
+    return PrecisionPolicy.from_dict(json.loads(spec))
+
+
+@functools.lru_cache(maxsize=4096)
+def _resolve_cached(policy: PrecisionPolicy, path: str, op: str) -> EulerConfig:
+    best = None
+    best_score = None
+    for i, rule in enumerate(policy.rules):
+        if not rule.matches(path, op):
+            continue
+        score = (rule.op is not None, rule.specificity, i)
+        if best_score is None or score > best_score:
+            best, best_score = rule, score
+    return best.cfg if best is not None else policy.default

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import Ctx
+from repro.numerics import NumericsContext
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,8 +31,18 @@ class GenerationConfig:
 
 
 class ServeEngine:
-    def __init__(self, model, params, ctx: Ctx, *, max_len: int = 2048,
-                 batch: int = 8, cache_dtype=None):
+    def __init__(self, model, params, ctx: Ctx | None = None, *,
+                 max_len: int = 2048, batch: int = 8, cache_dtype=None,
+                 numerics: NumericsContext | None = None):
+        """``numerics`` (policy + backend) overrides whatever the ctx
+        carries — the serving-time precision/backend switch.  With no ctx at
+        all, one is derived from the model's own numerics."""
+        if ctx is None:
+            ctx = (model.make_ctx() if hasattr(model, "make_ctx")
+                   else Ctx(numerics=numerics))
+        if numerics is not None:
+            ctx = dataclasses.replace(ctx, numerics=numerics,
+                                      ecfg=numerics.policy.default)
         self.model = model
         self.params = params
         self.ctx = ctx

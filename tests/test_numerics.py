@@ -1,0 +1,329 @@
+"""Unified numerics API: policy resolution, serialization, backend registry,
+lax_ref/pallas parity, and mixed-precision model forwards (acceptance)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import numerics as N
+from repro.core.engine import EXACT, EulerConfig, euler_matmul, from_variant
+
+P8 = from_variant(8, "L-21b")
+P16 = from_variant(16, "L-21b")
+P32 = from_variant(32, "L-22b")
+EX = EulerConfig(mode="exact")
+
+
+# --------------------------------------------------------------------------
+# PrecisionPolicy resolution
+# --------------------------------------------------------------------------
+
+def test_policy_default_fallback():
+    pol = N.PrecisionPolicy.uniform(P16)
+    assert pol.resolve("anything", "matmul") == P16
+    assert pol.resolve("", "qk") == P16
+
+
+def test_policy_pattern_match_and_specificity():
+    pol = (N.PrecisionPolicy.uniform(P16)
+           .with_rule("*", P32)            # least specific
+           .with_rule("*attn*", P8))       # more literal chars -> wins
+    assert pol.resolve("attn") == P8
+    assert pol.resolve("layer3/attn") == P8
+    assert pol.resolve("mlp") == P32       # "*" still beats the default
+
+
+def test_policy_op_override_beats_generic():
+    pol = (N.PrecisionPolicy.uniform(P16)
+           .with_rule("attn", P8)
+           .with_rule("attn", EX, op="qk"))
+    assert pol.resolve("attn", "matmul") == P8
+    assert pol.resolve("attn", "qk") == EX
+    # op-specific wins even when listed first / less specific
+    pol2 = (N.PrecisionPolicy.uniform(P16)
+            .with_rule("*", EX, op="pv")
+            .with_rule("attn", P8))
+    assert pol2.resolve("attn", "pv") == EX
+    assert pol2.resolve("attn", "matmul") == P8
+
+
+def test_policy_later_rule_wins_ties():
+    pol = (N.PrecisionPolicy.uniform(P16)
+           .with_rule("attn", P8)
+           .with_rule("attn", P32))
+    assert pol.resolve("attn") == P32
+
+
+def test_policy_rejects_unknown_op():
+    with pytest.raises(ValueError):
+        N.PolicyRule("x", P8, op="conv")
+    with pytest.raises(ValueError):
+        N.PrecisionPolicy.uniform(P8).resolve("x", "conv")
+
+
+# --------------------------------------------------------------------------
+# Serialization
+# --------------------------------------------------------------------------
+
+def test_policy_dict_roundtrip():
+    pol = (N.PrecisionPolicy.uniform(P16)
+           .with_rule("*attn*", P8, op="qk")
+           .with_rule("*head*", EX))
+    blob = json.dumps(pol.to_dict())           # JSON-clean
+    back = N.PrecisionPolicy.from_dict(json.loads(blob))
+    assert back == pol
+    assert back.resolve("attn", "qk") == P8
+    assert back.resolve("head") == EX
+
+
+def test_ecfg_dict_roundtrip_and_variant_shorthand():
+    for cfg in (P8, P16, P32, EX, EulerConfig(width=8, mode="logfxp")):
+        assert N.ecfg_from_dict(N.ecfg_to_dict(cfg)) == cfg
+    assert N.ecfg_from_dict({"width": 16, "variant": "L-21b"}) == P16
+    assert N.ecfg_from_dict({"mode": "exact"}) == EX
+
+
+def test_load_policy_file_and_inline(tmp_path):
+    pol = N.PrecisionPolicy.uniform(P16).with_rule("*attn*", P8)
+    blob = json.dumps(pol.to_dict())
+    assert N.load_policy(blob) == pol
+    f = tmp_path / "p.json"
+    f.write_text(blob)
+    assert N.load_policy(str(f)) == pol
+
+
+def test_numerics_context_roundtrip():
+    nctx = N.NumericsContext(policy=N.PrecisionPolicy.uniform(P8),
+                             backend="pallas")
+    assert N.NumericsContext.from_dict(nctx.to_dict()) == nctx
+
+
+# --------------------------------------------------------------------------
+# Registry + context scoping
+# --------------------------------------------------------------------------
+
+def test_backend_registry():
+    assert set(N.available_backends()) >= {"exact", "lax_ref", "pallas"}
+    with pytest.raises(KeyError):
+        N.get_backend("no_such_backend")
+
+    class Doubler(N.Backend):
+        def dot_general(self, a, b, dn, cfg):
+            return 2 * jax.lax.dot_general(a, b, dn)
+
+        def elementwise(self, a, b, cfg):
+            return 2 * a * b
+
+    import repro.numerics.backends as B
+    try:
+        N.register_backend("doubler", Doubler())
+        with N.use(EX, backend="doubler"):
+            out = N.matmul(jnp.ones((2, 3)), jnp.ones((3, 4)))
+        np.testing.assert_allclose(np.asarray(out), 6.0)
+    finally:
+        B._BACKENDS.pop("doubler", None)
+
+
+def test_use_and_scope_nesting():
+    pol = N.PrecisionPolicy.uniform(P16).with_rule("outer/inner", P8)
+    assert N.current() is N.DEFAULT
+    with N.use(pol) as nctx:
+        assert N.current() is nctx
+        with N.scope("outer"):
+            assert N.current_path() == "outer"
+            with N.scope("inner"):
+                assert N.current_path() == "outer/inner"
+                assert N.resolve("matmul") == P8
+            assert N.resolve("matmul") == P16
+    assert N.current() is N.DEFAULT
+    assert N.current_path() == ""
+
+
+def test_use_accepts_bare_ecfg_and_backend_override():
+    with N.use(P8, backend="exact") as nctx:
+        assert nctx.policy.default == P8
+        assert nctx.backend == "exact"
+
+
+def test_ctx_backward_compat():
+    from repro.models.layers import Ctx
+    ctx = Ctx(ecfg=P16)                       # legacy construction
+    assert ctx.numerics.policy.default == P16
+    ctx2 = Ctx(numerics=N.NumericsContext.from_ecfg(P8))  # new construction
+    assert ctx2.ecfg == P8                    # legacy readers keep working
+    assert Ctx().ecfg.mode == "exact"         # bare Ctx defaults to exact
+
+
+# --------------------------------------------------------------------------
+# Backend semantics + parity
+# --------------------------------------------------------------------------
+
+def test_exact_backend_ignores_approximation(rng):
+    a = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    with N.use(P8, backend="exact"):
+        out = N.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b), rtol=1e-6)
+
+
+def test_lax_ref_matches_engine(rng):
+    a = jnp.asarray(rng.normal(size=(24, 40)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(40, 12)), jnp.float32)
+    with N.use(P16):
+        out = N.matmul(a, b)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(euler_matmul(a, b, P16)))
+
+
+@pytest.mark.parametrize("cfg", [P8, P16, P32], ids=["P8", "P16", "P32"])
+def test_backend_parity_lax_ref_vs_pallas(cfg, rng):
+    """Acceptance: both backends agree on small matmuls for P8/P16/P32."""
+    a = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(48, 16)), jnp.float32)
+    with N.use(cfg):
+        ref = N.matmul(a, b)
+    with N.use(cfg, backend="pallas"):
+        fused = N.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_pallas_handles_nd_lhs_and_nonzero_contract_dim(rng):
+    a = jnp.asarray(rng.normal(size=(2, 8, 24)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(24, 10)), jnp.float32)
+    with N.use(P16, backend="pallas"):
+        out3d = N.matmul(a, b)
+    with N.use(P16):
+        ref3d = N.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(out3d), np.asarray(ref3d),
+                               rtol=1e-4, atol=1e-3)
+    # head-style contraction: lhs last dim against rhs dim 1
+    h = jnp.asarray(rng.normal(size=(6, 24)), jnp.float32)
+    emb = jnp.asarray(rng.normal(size=(20, 24)), jnp.float32)
+    dn = (((1,), (1,)), ((), ()))
+    with N.use(P16, backend="pallas"):
+        got = N.dot_general(h, emb, dn)
+    with N.use(P16):
+        want = N.dot_general(h, emb, dn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_pallas_falls_back_for_batched_and_non_euler(rng):
+    q = jnp.asarray(rng.normal(size=(2, 4, 8, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 4, 6, 16)), jnp.float32)
+    # batched qk: pallas must produce the reference engine's result exactly
+    with N.use(P16, backend="pallas"):
+        got = N.qk(q, k)
+    with N.use(P16):
+        want = N.qk(q, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # non-euler modes fall back too
+    a = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+    cfg = EulerConfig(width=16, mode="posit")
+    with N.use(cfg, backend="pallas"):
+        got = N.matmul(a, a)
+    with N.use(cfg):
+        want = N.matmul(a, a)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_elementwise_op(rng):
+    a = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    with N.use(EX):
+        np.testing.assert_allclose(np.asarray(N.elementwise(a, b)),
+                                   np.asarray(a * b), rtol=1e-6)
+    from repro.core.engine import ilm_elementwise
+    with N.use(P16):
+        got = N.elementwise(a, b)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ilm_elementwise(a, b, P16)))
+
+
+# --------------------------------------------------------------------------
+# Mixed-precision models through both backends (acceptance criterion)
+# --------------------------------------------------------------------------
+
+def _mixed_policy():
+    return (N.PrecisionPolicy.uniform(P16)
+            .with_rule("*attn*", P8)
+            .with_rule("*head*", EX))
+
+
+def _tiny_model():
+    from repro.models.config import ModelConfig
+    from repro.models.transformer import Model
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      loss_chunk=16, q_chunk=16, kv_chunk=16)
+    return Model(cfg, numerics=N.NumericsContext(policy=_mixed_policy()))
+
+
+def test_mixed_precision_forward_backend_parity(rng):
+    """A model with two posit widths + exact head runs through lax_ref AND
+    pallas with matching logits (ISSUE 4 acceptance)."""
+    from repro.models.layers import Ctx
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    ids = jnp.asarray(rng.integers(0, 64, (2, 16)), jnp.int32)
+    logits = {}
+    for backend in ("lax_ref", "pallas"):
+        ctx = Ctx(numerics=N.NumericsContext(policy=_mixed_policy(),
+                                             backend=backend))
+        h, _, _ = jax.jit(lambda p, x, c=ctx: model.forward(p, x, c))(
+            params, ids)
+        logits[backend] = np.asarray(model.head(params, h, ctx))
+    np.testing.assert_allclose(logits["pallas"], logits["lax_ref"],
+                               rtol=1e-4, atol=2e-3)
+    # and the mixed run differs from uniform exact (policy is live)
+    ctx = Ctx(ecfg=EX)
+    h, _, _ = jax.jit(lambda p, x: model.forward(p, x, ctx))(params, ids)
+    le = np.asarray(model.head(params, h, ctx))
+    assert np.abs(le - logits["lax_ref"]).max() > 1e-6
+
+
+def test_mixed_policy_resolves_per_scope(monkeypatch):
+    """Different scopes really see different widths during a forward."""
+    pol = _mixed_policy()
+    seen = {}
+    orig = N.dot_general
+
+    def spy(a, b, dn, ctx=None, *, op="dot_general", path=None):
+        p = path if path is not None else N.current_path()
+        nctx = ctx if ctx is not None else N.current()
+        seen.setdefault((p, op), nctx.cfg_for(p, op))
+        return orig(a, b, dn, ctx, op=op, path=path)
+
+    # models reference the package module object, so patching its attribute
+    # intercepts every layer's dispatch
+    monkeypatch.setattr(N, "dot_general", spy)
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.models.layers import Ctx
+    ctx = Ctx(numerics=N.NumericsContext(policy=pol))
+    ids = jnp.zeros((1, 16), jnp.int32)
+    h, _, _ = model.forward(params, ids, ctx)
+    model.head(params, h, ctx)
+    widths = {p: cfg.width if cfg.mode != "exact" else "exact"
+              for (p, _), cfg in seen.items()}
+    assert widths["attn"] == 8
+    assert widths["mlp"] == 16
+    assert widths["head"] == "exact"
+
+
+def test_serve_engine_numerics_override(rng):
+    """ServeEngine(numerics=...) swaps precision without touching the model."""
+    from repro.serving import GenerationConfig, ServeEngine
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32)
+    toks = {}
+    for name, nctx in [("exact", N.NumericsContext.from_ecfg(EX)),
+                       ("mixed", N.NumericsContext(policy=_mixed_policy()))]:
+        eng = ServeEngine(model, params, max_len=32, batch=2, numerics=nctx)
+        toks[name] = np.asarray(
+            eng.generate(prompts, GenerationConfig(max_new_tokens=4)))
+    assert toks["exact"].shape == toks["mixed"].shape == (2, 4)

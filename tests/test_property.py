@@ -1,7 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+hypothesis is an OPTIONAL test dependency (see pyproject.toml
+[project.optional-dependencies].test): skip cleanly instead of aborting the
+whole collection under ``pytest -x`` when it is absent.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import logmult as LM
 from repro.core import posit as P
