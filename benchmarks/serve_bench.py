@@ -1,0 +1,111 @@
+"""Serving benchmark: sustained tokens/sec and per-request completion
+latency (p50/p99) through the continuous-batching scheduler, across the
+``repro.numerics`` backends.
+
+SPADE (arXiv:2601.17279) and Nakasato et al. (arXiv:2401.14117) both argue
+posit engines win or lose on *sustained-throughput* behavior, not
+single-kernel numbers — this is the serving-loop counterpart of
+``engine_bench.py``: the same EULER numerics, but measured through slot
+admission, masked decode and mid-stream refill.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke
+  PYTHONPATH=src python benchmarks/serve_bench.py \\
+      --backends exact,lax_ref,pallas --requests 32 --batch 4 --max-new 32
+
+Latency is measured from ``run()`` start to each request's completion
+callback (requests are all queued up front, so this is completion time
+under a full queue — the continuous-batching number, not a single-request
+cold start).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import numerics as N
+from repro.core.engine import from_variant
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+from repro.serving import GenerationConfig, RequestBatcher, ServeEngine
+
+
+def bench_backend(backend: str, cfg: ModelConfig, *, batch: int,
+                  max_len: int, requests: int, max_new: int,
+                  buckets=(16, 32), seed: int = 0):
+    """Serve ``requests`` random prompts; returns a metrics dict."""
+    nctx = N.NumericsContext.from_ecfg(from_variant(16, "L-21b"),
+                                       backend=backend)
+    model = Model(cfg, remat=False, numerics=nctx)
+    params = model.init(jax.random.PRNGKey(seed))
+    eng = ServeEngine(model, params, max_len=max_len, batch=batch,
+                      numerics=nctx)
+    batcher = RequestBatcher(eng, prompt_buckets=buckets)
+    rng = np.random.default_rng(seed)
+    for _ in range(requests):
+        plen = int(rng.integers(4, max(buckets) + 1))
+        batcher.submit(rng.integers(0, cfg.vocab, plen), max_new=max_new)
+
+    lat: dict[int, float] = {}
+    t0 = time.perf_counter()
+    results = batcher.run(GenerationConfig(max_new_tokens=max_new),
+                          on_complete=lambda rid, toks:
+                          lat.__setitem__(rid, time.perf_counter() - t0))
+    wall = time.perf_counter() - t0
+    toks = sum(len(v) for v in results.values())
+    ls = np.asarray(sorted(lat.values()))
+    return {
+        "backend": backend,
+        "requests": len(results),
+        "tokens": toks,
+        "wall_s": wall,
+        "tok_per_s": toks / wall,
+        "p50_ms": float(np.percentile(ls, 50)) * 1e3,
+        "p99_ms": float(np.percentile(ls, 99)) * 1e3,
+        "steps": batcher.stats["steps"],
+        "refills": batcher.stats["refills"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default="exact,lax_ref",
+                    help="comma list from: " + ",".join(N.available_backends())
+                         + " (pallas runs in interpret mode off-TPU: slow)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: exercises admission, masked "
+                         "decode and mid-stream refill end-to-end")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests, args.batch, args.max_new = 6, 2, 8
+
+    cfg = ModelConfig(name="serve-bench", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab=128, loss_chunk=32, q_chunk=32, kv_chunk=32)
+    print(f"# serve_bench batch={args.batch} requests={args.requests} "
+          f"max_new={args.max_new} (euler16 L-21b)")
+    print("backend,requests,tokens,tok_per_s,p50_ms,p99_ms,steps,refills")
+    for backend in args.backends.split(","):
+        r = bench_backend(backend.strip(), cfg, batch=args.batch,
+                          max_len=args.max_len, requests=args.requests,
+                          max_new=args.max_new, seed=args.seed)
+        print(f"{r['backend']},{r['requests']},{r['tokens']},"
+              f"{r['tok_per_s']:.1f},{r['p50_ms']:.0f},{r['p99_ms']:.0f},"
+              f"{r['steps']},{r['refills']}")
+        if args.smoke:
+            assert r["requests"] == args.requests, r
+            assert r["tokens"] == args.requests * args.max_new, r
+            assert r["refills"] >= 1, "no mid-stream refill exercised"
+    if args.smoke:
+        print("serve_bench smoke OK")
+
+
+if __name__ == "__main__":
+    main()

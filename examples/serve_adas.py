@@ -65,11 +65,24 @@ for name, policy in MODES:
     res = batcher.run(GenerationConfig(max_new_tokens=12))
     dt = time.time() - t0
     outputs[name] = np.stack([res[i] for i in sorted(res)])
-    print(f"{name:14s}: {len(res)} reqs, {12 * len(res) / dt:6.1f} tok/s")
+    print(f"{name:14s}: {len(res)} reqs, {12 * len(res) / dt:6.1f} tok/s "
+          f"({batcher.stats['steps']} steps, "
+          f"{batcher.stats['refills']} slot refills)")
 
 fp32 = outputs["FP32"]
 for name, _ in MODES:
     toks = outputs[name]
     agree = (toks == fp32).mean()
     print(f"token agreement vs FP32 — {name}: {agree:.1%}")
+
+# --- EOS semantics: the scheduler stops a request at its first EOS ---------
+eos = int(fp32[0][2])  # a token we know the greedy stream emits at step 2
+b = RequestBatcher(ServeEngine(Model(CFG, EulerConfig(mode="exact"),
+                                     remat=False),
+                               state.params, max_len=64, batch=4),
+                   prompt_buckets=(32,))
+rid = b.submit(prompts[0], max_new=12)
+out = b.run(GenerationConfig(max_new_tokens=12, eos_id=eos))[rid]
+assert len(out) == 3 and out[-1] == eos, (out, eos)
+print(f"eos={eos}: request stopped after {len(out)}/12 tokens: {out}")
 print("serve_adas OK")

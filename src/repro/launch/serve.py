@@ -1,12 +1,13 @@
 """Serving driver: load (or init) a model and drain batched requests through
-the EULER-ADAS engine.
+the EULER-ADAS continuous-batching scheduler.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \\
-      --requests 12 --max-new 16 --euler L-21b
+      --requests 12 --max-new 16 --euler L-21b --eos-id 7 --stream
 """
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
@@ -17,7 +18,8 @@ from repro.distributed import checkpoint as CK
 from repro.launch.train import build_numerics
 from repro.models.layers import Ctx
 from repro.models.transformer import Model
-from repro.serving import GenerationConfig, RequestBatcher, ServeEngine
+from repro.serving import (GenerationConfig, QueueFullError, RequestBatcher,
+                           ServeEngine)
 
 
 def main(argv=None):
@@ -35,9 +37,17 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop a request at this token id (-1: no EOS)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission cap: submit() fails beyond this many "
+                         "queued requests (0: unbounded)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each request the step it completes")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.WARNING)
 
     mod = C.get_config(args.arch)
     cfg = mod.SMOKE if args.smoke else mod.FULL
@@ -58,18 +68,38 @@ def main(argv=None):
     ctx = Ctx(ecfg=ecfg, numerics=nctx)
     eng = ServeEngine(model, params, ctx, max_len=args.max_len,
                       batch=args.batch)
-    batcher = RequestBatcher(eng, prompt_buckets=(32, 128))
+    batcher = RequestBatcher(eng, prompt_buckets=(32, 128),
+                             max_queue=args.max_queue or None)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
+    dropped = 0
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
-        batcher.submit(rng.integers(0, cfg.vocab, plen), max_new=args.max_new)
-    results = batcher.run(GenerationConfig(max_new_tokens=args.max_new,
-                                           temperature=args.temperature))
+        try:
+            batcher.submit(rng.integers(0, cfg.vocab, plen),
+                           max_new=args.max_new)
+        except QueueFullError:  # admission control: shed load, keep serving
+            dropped += 1
+    if dropped:
+        print(f"queue full: dropped {dropped}/{args.requests} requests "
+              f"(max_queue={args.max_queue})")
+
+    def on_complete(rid, toks):
+        if args.stream:
+            print(f"  [{time.time() - t0:6.2f}s] req {rid} done "
+                  f"({len(toks)} tokens): {toks[:8]}...")
+
+    results = batcher.run(
+        GenerationConfig(max_new_tokens=args.max_new,
+                         temperature=args.temperature,
+                         eos_id=None if args.eos_id < 0 else args.eos_id),
+        on_complete=on_complete)
     dt = time.time() - t0
     toks = sum(len(v) for v in results.values())
     print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s) under {ecfg.variant}@posit{ecfg.width}")
+          f"({toks / dt:.1f} tok/s) under {ecfg.variant}@posit{ecfg.width} "
+          f"[{batcher.stats['steps']} steps, {batcher.stats['refills']} "
+          f"mid-stream refills]")
     for rid in sorted(results)[:4]:
         print(f"  req {rid}: {results[rid][:8]}...")
 

@@ -54,7 +54,8 @@ class Ctx:
     mesh: Any = None                 # jax Mesh or None
     data_axes: tuple = ("pod", "data")
     model_axis: str = "model"
-    decode_pos: Any = None           # scalar position when decoding
+    decode_pos: Any = None           # decode position: scalar (lockstep
+                                     # batch) or [B] per-slot vector
     deterministic: bool = True
     moe_fsdp: bool = False           # expert weights 2D-sharded (model, data)
     attn_head_shard: bool = False    # shard q/k/v heads over model in
@@ -243,21 +244,29 @@ def attention_apply(p, x, ctx: Ctx, cfg, window, positions,
 
     if cache is not None and T == 1:
         # ---- decode ----
-        ck, cv, pos = cache["k"], cache["v"], ctx.decode_pos
-        ck = jax.lax.dynamic_update_slice(ck, cache_encode(k, ck.dtype),
-                                          (0, pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, cache_encode(v, cv.dtype),
-                                          (0, pos, 0, 0))
+        # ``ctx.decode_pos`` is a scalar (whole batch at one position) or a
+        # [B] vector (continuous batching: every slot at its own position).
+        # Both are normalized to per-row positions so cache writes and
+        # validity masks are per-slot.
+        ck, cv = cache["k"], cache["v"]
+        pos = jnp.asarray(ctx.decode_pos, jnp.int32)
+        pos_b = jnp.full((B,), pos) if pos.ndim == 0 else pos  # [B]
+
+        def _row_write(c, u, p_row):
+            return jax.lax.dynamic_update_slice(c, u, (p_row, 0, 0))
+
+        ck = jax.vmap(_row_write)(ck, cache_encode(k, ck.dtype), pos_b)
+        cv = jax.vmap(_row_write)(cv, cache_encode(v, cv.dtype), pos_b)
         S = ck.shape[1]
         s_pos = jnp.arange(S)
         kd = cache_decode(ck, x.dtype)
         vd = cache_decode(cv, x.dtype)
         scores = _attn_scores(q, kd, ctx, cfg.attn_softcap)  # [B,KV,1,g,S]
-        valid = s_pos <= pos
+        valid = s_pos[None, :] <= pos_b[:, None]             # [B, S]
         if window is not None:
             w = jnp.asarray(window, jnp.int32)
-            valid &= (w < 0) | (s_pos > pos - w)
-        scores = jnp.where(valid, scores, -1e30)
+            valid &= (w < 0) | (s_pos[None, :] > pos_b[:, None] - w)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1).astype(vd.dtype)
         out = _attn_values(probs, vd, ctx)
         y = dense_apply(p["wo"], out.astype(x.dtype), ctx)
@@ -322,6 +331,28 @@ def attention_apply(p, x, ctx: Ctx, cfg, window, positions,
 def attention_cache_init(cfg, batch: int, max_len: int, dtype=jnp.float32):
     return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
             "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+
+def cache_reset(cache, slot=None, batch_axis: int = 0):
+    """Explicit cache lifecycle: zero a cache pytree.
+
+    ``slot=None`` invalidates the whole cache; an integer (or traced int32)
+    ``slot`` zeroes one batch row only — the primitive the serving layer
+    uses to invalidate a slot so no KV/SSM state can leak between
+    requests.  ``batch_axis`` is 0 for the unstacked per-layer caches and
+    1 for the model-level [L, B, ...] stacks.  uint8 posit KV caches zero
+    to the Posit(8,0) zero pattern, which is the 0 byte.
+    """
+    if slot is None:
+        return jax.tree.map(jnp.zeros_like, cache)
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def _zero_row(a):
+        shape = a.shape[:batch_axis] + (1,) + a.shape[batch_axis + 1:]
+        return jax.lax.dynamic_update_slice_in_dim(
+            a, jnp.zeros(shape, a.dtype), slot, axis=batch_axis)
+
+    return jax.tree.map(_zero_row, cache)
 
 
 # --------------------------------------------------------------------------

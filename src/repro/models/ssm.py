@@ -205,3 +205,13 @@ def ssm_cache_init(cfg, batch: int, dtype=jnp.float32):
         "state": jnp.zeros((batch, H, N, P), jnp.float32),
         "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
     }
+
+
+def ssm_cache_reset(cache, slot=None, batch_axis: int = 0):
+    """Zero the recurrent SSM state/conv buffers — whole cache or one batch
+    slot.  Unlike the KV cache (whose stale tail is masked out by the
+    position-validity mask), the SSM state is *recurrent*: a stale state is
+    silently folded into every subsequent step, so slot retirement MUST
+    reset it before a new request is prefilled into the slot."""
+    from .layers import cache_reset
+    return cache_reset(cache, slot, batch_axis)

@@ -195,8 +195,15 @@ class Model:
             x = L.embed_apply(params["embed"], inputs).astype(self.compute_dtype)
         B, T = x.shape[0], x.shape[1]
         if positions is None:
-            positions = (jnp.arange(T, dtype=jnp.int32) if ctx.decode_pos is None
-                         else jnp.asarray([ctx.decode_pos], jnp.int32))
+            if ctx.decode_pos is None:
+                positions = jnp.arange(T, dtype=jnp.int32)
+            else:
+                # decode: scalar position (whole batch in lockstep) keeps the
+                # [1]-shaped legacy layout; a [B] vector (continuous
+                # batching, every slot at its own offset) becomes [B, 1] so
+                # RoPE broadcasts per row.
+                dp = jnp.asarray(ctx.decode_pos, jnp.int32)
+                positions = dp.reshape(1) if dp.ndim == 0 else dp[:, None]
         x = ctx.shard(x, ctx.data_axes, None, None)
 
         windows = self.layer_windows()
@@ -342,6 +349,16 @@ class Model:
             return stack(c)
         return stack(L.attention_cache_init(cfg, batch, max_len, dtype))
 
+    def reset_cache(self, cache, slot=None):
+        """Explicit cache lifecycle for serving.
+
+        ``slot=None`` zeroes the whole cache (``reset_all``); an int /
+        traced int32 zeroes one batch row (``reset_slot``) so a retired
+        request's KV *and* recurrent SSM state cannot leak into the next
+        occupant of the slot.  Model-level caches are [L, B, ...] stacks,
+        hence ``batch_axis=1``."""
+        return L.cache_reset(cache, slot, batch_axis=1)
+
     def prefill(self, params, inputs, ctx: Ctx, cache):
         """Run the prompt through the stack, filling the cache.
         Returns (last-position logits [B, Vp], cache)."""
@@ -350,8 +367,10 @@ class Model:
         return logits, cache
 
     def decode_step(self, params, tok, pos, cache, ctx: Ctx):
-        """One decode step.  tok: [B] int32; pos: traced scalar position.
-        Returns (logits [B, Vp], new cache)."""
+        """One decode step.  tok: [B] int32; pos: traced scalar position
+        (lockstep batch) or [B] int32 vector (per-slot positions, used by
+        the continuous-batching scheduler).  Returns (logits [B, Vp],
+        new cache)."""
         ctx = dataclasses.replace(ctx, decode_pos=pos)
         hidden, cache, _ = self.forward(params, tok[:, None], ctx, cache=cache)
         logits = self.head(params, hidden[:, 0, :], ctx)

@@ -1,3 +1,5 @@
-from .engine import ServeEngine, GenerationConfig, RequestBatcher
+from .engine import (GenerationConfig, QueueFullError, Request,
+                     RequestBatcher, ServeEngine)
 
-__all__ = ["ServeEngine", "GenerationConfig", "RequestBatcher"]
+__all__ = ["ServeEngine", "GenerationConfig", "RequestBatcher", "Request",
+           "QueueFullError"]

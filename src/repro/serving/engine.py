@@ -1,18 +1,39 @@
-"""Batched serving: prefill + decode loop over the stacked KV/SSM caches.
+"""Slot-based continuous-batching serving.
 
-``ServeEngine`` owns the jitted ``prefill`` and ``decode_step`` (the two
-functions the dry-run lowers for the *_32k / long_500k shapes) and a
-``generate`` driver that scans a fixed number of decode steps on-device.
+The serving layer is built around two invariants that make the classic
+serving-loop bug class (ignored EOS, bucket-overflow corruption, stale
+caches) structurally impossible:
 
-``RequestBatcher`` is the host-side admission layer: requests are grouped
-into fixed (batch, prompt-bucket) shapes so every lowered program is reused
-(continuous-batching-lite: a slot map tracks live requests; finished slots
-are refilled at bucket boundaries).
+* **Explicit cache lifecycle.**  ``ServeEngine`` owns the stacked KV/SSM
+  cache and exposes ``reset_all`` / ``reset_slot`` (backed by the model
+  cache API, ``Model.reset_cache``).  ``generate`` resets the whole cache
+  before prefill; the scheduler resets a slot before refilling it, so no
+  state survives a request.
+
+* **Per-slot device state.**  Every batch row ("slot") carries its own
+  position, so prompts of different lengths decode side by side and a
+  finished slot is refilled *at step granularity* while its neighbours
+  keep decoding (``Model.decode_step`` accepts a [B] position vector).
+
+``ServeEngine.generate`` keeps its whole-batch signature: EOS-aware decode
+that masks finished rows to ``pad_id`` and early-exits (host-checked in
+chunks of ``decode_chunk`` on-device steps) once every row is done.
+
+``RequestBatcher`` is the host-side scheduler.  Request lifecycle::
+
+    queued -> prefill (slot admission, batch-1, own bucket) -> decoding
+           -> done (EOS | max_new budget) -> slot refilled from the queue
+
+Prompts are bucketed per *request* (not per batch group), so a request's
+tokens are independent of whichever other requests it was co-scheduled
+with; a prompt longer than the largest bucket is truncated to its last
+``bucket`` tokens with a logged warning (never a negative-offset slice).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import logging
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -21,22 +42,40 @@ import numpy as np
 from repro.models.layers import Ctx
 from repro.numerics import NumericsContext
 
+log = logging.getLogger("repro.serving")
+
 
 @dataclasses.dataclass(frozen=True)
 class GenerationConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0          # 0 => greedy
     top_k: int = 0                    # 0 => no top-k filter
-    eos_id: int | None = None
+    eos_id: int | None = None         # stop a row once it emits this token
+    pad_id: int = 0                   # what finished rows emit afterwards
+
+
+def _sample(logits, gen: GenerationConfig, key):
+    """Greedy / temperature / top-k sampling of one [B, V] logits slab."""
+    if gen.temperature == 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    logits = logits / gen.temperature
+    if gen.top_k:
+        kth = jax.lax.top_k(logits, gen.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
 class ServeEngine:
     def __init__(self, model, params, ctx: Ctx | None = None, *,
                  max_len: int = 2048, batch: int = 8, cache_dtype=None,
+                 decode_chunk: int = 8,
                  numerics: NumericsContext | None = None):
         """``numerics`` (policy + backend) overrides whatever the ctx
         carries — the serving-time precision/backend switch.  With no ctx at
-        all, one is derived from the model's own numerics."""
+        all, one is derived from the model's own numerics.
+
+        ``decode_chunk``: how many decode steps ``generate`` scans on-device
+        between host-side all-done checks (the early-exit granularity)."""
         if ctx is None:
             ctx = (model.make_ctx() if hasattr(model, "make_ctx")
                    else Ctx(numerics=numerics))
@@ -48,44 +87,141 @@ class ServeEngine:
         self.ctx = ctx
         self.max_len = max_len
         self.batch = batch
+        self.decode_chunk = max(1, decode_chunk)
         self.cache = model.init_cache(batch, max_len, cache_dtype)
+        # zero batch-1 cache template for slot prefills (never mutated:
+        # prefill is functional, so this stays all-zeros)
+        self._cache1 = model.init_cache(1, max_len, cache_dtype)
         self._prefill = jax.jit(
             lambda p, toks, cache: model.prefill(p, toks, ctx, cache))
-        self._step = jax.jit(
-            lambda p, tok, pos, cache: model.decode_step(p, tok, pos, cache, ctx))
+        self._reset = jax.jit(lambda c: model.reset_cache(c))
+        self._reset_slot = jax.jit(lambda c, s: model.reset_cache(c, s))
+        self._write_slot_fn = jax.jit(
+            lambda c, c1, s: jax.tree.map(
+                lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+                    a, b.astype(a.dtype), s, axis=1), c, c1))
+        self._scan_cache: dict[tuple, Any] = {}
+        self.last_decode_steps = 0  # decode steps run by the last generate
 
-    # -- device-side generation loop ------------------------------------
+    # -- cache lifecycle ------------------------------------------------
+
+    def reset_all(self):
+        """Invalidate every slot (used at the top of every generate/run)."""
+        self.cache = self._reset(self.cache)
+
+    def reset_slot(self, slot: int):
+        """Invalidate one slot (used when the scheduler retires a request)."""
+        self.cache = self._reset_slot(self.cache, jnp.int32(slot))
+
+    # -- jitted decode programs -----------------------------------------
+
+    def _decode_scan(self, gen: GenerationConfig, n: int):
+        """n masked decode steps, scanned on-device.
+
+        Carry: (tok [B], pos [B], done [B], cache, key).  Finished rows emit
+        ``pad_id``, keep their position frozen and their sampled token
+        replaced — so a done row can never advance or influence its own
+        stream again.  Active rows clamp position writes to max_len-1
+        (dynamic_update_slice would clamp anyway; being explicit keeps the
+        cache write location well-defined)."""
+        cache_key = (gen.temperature, gen.top_k, gen.eos_id, gen.pad_id, n)
+        if cache_key in self._scan_cache:
+            return self._scan_cache[cache_key]
+        pad = jnp.int32(gen.pad_id)
+        eos = gen.eos_id
+        maxpos = self.max_len - 1
+        model, ctx = self.model, self.ctx
+
+        def run(params, tok, pos, done, cache, key):
+            def body(carry, _):
+                tok, pos, done, cache, key = carry
+                key, sub = jax.random.split(key)
+                logits, cache = model.decode_step(params, tok, pos, cache, ctx)
+                nxt = _sample(logits, gen, sub)
+                nxt = jnp.where(done, pad, nxt)
+                pos = jnp.where(done, pos, jnp.minimum(pos + 1, maxpos))
+                if eos is not None:
+                    done = done | (nxt == eos)
+                return (nxt, pos, done, cache, key), nxt
+
+            carry, toks = jax.lax.scan(body, (tok, pos, done, cache, key),
+                                       None, length=n)
+            return carry, toks
+
+        fn = jax.jit(run)
+        self._scan_cache[cache_key] = fn
+        return fn
+
+    # -- whole-batch generation (legacy API, now EOS-aware) -------------
 
     def generate(self, prompts, gen: GenerationConfig, key=None):
-        """prompts: [B, Tp] int32 (right-aligned, no padding support needed
-        for fixed buckets).  Returns tokens [B, max_new_tokens]."""
+        """prompts: [B, Tp] int32 (right-aligned in fixed buckets).
+
+        Returns tokens [B, max_new_tokens].  With ``gen.eos_id`` set, a row
+        stops at (and including) its first EOS and emits ``gen.pad_id``
+        afterwards; the decode loop early-exits once every row is done (the
+        output is still padded to the full [B, max_new_tokens] shape)."""
         B, Tp = prompts.shape
         assert B == self.batch
+        if gen.max_new_tokens <= 0:
+            return jnp.zeros((B, 0), jnp.int32)
         key = key if key is not None else jax.random.PRNGKey(0)
+        self.reset_all()  # no state from a previous generate can leak in
         logits, cache = self._prefill(self.params, prompts, self.cache)
-
-        def sample(logits, key):
-            if gen.temperature == 0.0:
-                return jnp.argmax(logits, -1).astype(jnp.int32)
-            logits = logits / gen.temperature
-            if gen.top_k:
-                kth = jax.lax.top_k(logits, gen.top_k)[0][..., -1:]
-                logits = jnp.where(logits < kth, -1e30, logits)
-            return jax.random.categorical(key, logits).astype(jnp.int32)
-
-        def body(carry, i):
-            tok, pos, cache, key = carry
-            key, sub = jax.random.split(key)
-            logits, cache = self._step(self.params, tok, pos, cache)
-            nxt = sample(logits, sub)
-            return (nxt, pos + 1, cache, key), nxt
-
-        tok0 = sample(logits, key)
-        (_, _, cache, _), toks = jax.lax.scan(
-            body, (tok0, jnp.int32(Tp), cache, key),
-            jnp.arange(gen.max_new_tokens - 1))
+        key, sub = jax.random.split(key)
+        tok = _sample(logits, gen, sub)
+        done = (tok == gen.eos_id if gen.eos_id is not None
+                else jnp.zeros((B,), bool))
+        pos = jnp.full((B,), Tp, jnp.int32)
+        outs = [tok[:, None]]  # first token comes from the prefill logits
+        remaining = gen.max_new_tokens - 1
+        steps = 0
+        while remaining > 0 and not bool(done.all()):
+            n = min(self.decode_chunk, remaining)
+            scan = self._decode_scan(gen, n)
+            (tok, pos, done, cache, key), toks = scan(
+                self.params, tok, pos, done, cache, key)
+            outs.append(toks.T)  # [B, n]
+            remaining -= n
+            steps += n
         self.cache = cache
-        return jnp.concatenate([tok0[:, None], toks.T], axis=1)
+        self.last_decode_steps = steps
+        out = jnp.concatenate(outs, axis=1)
+        if out.shape[1] < gen.max_new_tokens:  # early exit: pad to contract
+            out = jnp.pad(out, ((0, 0), (0, gen.max_new_tokens - out.shape[1])),
+                          constant_values=gen.pad_id)
+        return out
+
+    # -- slot-level primitives (used by the scheduler) -------------------
+
+    def prefill_slot(self, slot: int, prompt_tokens, gen: GenerationConfig,
+                     key) -> int:
+        """Prefill one request into ``slot`` and return its first token.
+
+        Runs a batch-1 prefill over the request's own bucket on a zero
+        cache and writes the resulting cache into the slot.  The write is a
+        FULL overwrite of every cache leaf's slot row (KV slabs, SSM state,
+        conv tail), i.e. it subsumes ``reset_slot`` — that is what makes
+        stale-state leaks into a refilled slot impossible."""
+        toks = jnp.asarray(prompt_tokens, jnp.int32)[None, :]
+        logits, c1 = self._prefill(self.params, toks, self._cache1)
+        self.cache = self._write_slot_fn(self.cache, c1, jnp.int32(slot))
+        return int(_sample(logits, gen, key)[0])
+
+    def step_slots(self, gen: GenerationConfig, tok, pos, active, key):
+        """One masked decode step over all slots.
+
+        ``tok``/``pos``: [B] host arrays; ``active``: [B] bool.  Inactive
+        slots are fed as done (emit pad, frozen position).  Returns the
+        emitted [B] tokens (numpy) and the threaded PRNG key; the cache
+        advances on the engine."""
+        scan = self._decode_scan(gen, 1)
+        (_, _, _, cache, key), toks = scan(
+            self.params, jnp.asarray(tok, jnp.int32),
+            jnp.asarray(pos, jnp.int32),
+            jnp.asarray(~np.asarray(active, bool)), self.cache, key)
+        self.cache = cache
+        return np.asarray(toks[0]), key
 
 
 @dataclasses.dataclass
@@ -97,16 +233,52 @@ class Request:
     done: bool = False
 
 
-class RequestBatcher:
-    """Host-side admission: buckets prompts to fixed shapes, packs batches."""
+class QueueFullError(RuntimeError):
+    """submit() on a batcher whose queue is at max_queue capacity."""
 
-    def __init__(self, engine: ServeEngine, prompt_buckets=(128, 512, 2048)):
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side per-slot scheduler state (device holds tok/pos vectors)."""
+    req: Request
+    budget: int          # tokens still allowed (per-request max_new cap)
+
+
+class RequestBatcher:
+    """Host-side continuous-batching scheduler over ``ServeEngine`` slots.
+
+    ``submit`` enqueues; ``run`` drains the queue: every free slot is
+    admitted (batch-1 prefill fully overwriting the slot), then the whole
+    batch decodes one masked step at a time — any slot that finishes (EOS
+    or budget) is retired and refilled from the queue *mid-stream*, without
+    waiting for the rest of the batch.  Because each request keeps its own
+    bucket and position, its tokens are identical to a single-request run.
+    """
+
+    def __init__(self, engine: ServeEngine, prompt_buckets=(128, 512, 2048),
+                 max_queue: int | None = None):
         self.engine = engine
-        self.buckets = sorted(prompt_buckets)
+        buckets = sorted(b for b in prompt_buckets if b < engine.max_len)
+        if not buckets:
+            raise ValueError(
+                f"no prompt bucket fits engine max_len={engine.max_len} "
+                f"(got {tuple(prompt_buckets)}); buckets must leave room "
+                f"for at least one generated token")
+        if len(buckets) < len(set(prompt_buckets)):
+            log.warning("dropping prompt buckets >= max_len=%d: %s",
+                        engine.max_len,
+                        sorted(set(prompt_buckets) - set(buckets)))
+        self.buckets = buckets
+        self.max_queue = max_queue
         self.queue: list[Request] = []
         self._next_rid = 0
+        self.events: list[tuple] = []   # ("admit"|"refill"|"done", rid, slot, step)
+        self.stats = {"steps": 0, "refills": 0, "truncated": 0}
 
     def submit(self, prompt, max_new: int = 32) -> int:
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise QueueFullError(
+                f"queue full ({len(self.queue)} >= max_queue={self.max_queue})")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
@@ -118,21 +290,129 @@ class RequestBatcher:
                 return b
         return self.buckets[-1]
 
-    def run(self, gen: GenerationConfig | None = None):
-        """Drain the queue; returns {rid: tokens}."""
-        results = {}
-        B = self.engine.batch
-        while self.queue:
-            group = self.queue[:B]
-            self.queue = self.queue[B:]
-            bucket = self._bucket(max(len(r.prompt) for r in group))
-            toks = np.zeros((B, bucket), np.int32)
-            for i, r in enumerate(group):
-                toks[i, bucket - len(r.prompt):] = r.prompt[:bucket]
-            g = gen or GenerationConfig(
-                max_new_tokens=max(r.max_new for r in group))
-            out = np.asarray(self.engine.generate(jnp.asarray(toks), g))
-            for i, r in enumerate(group):
-                results[r.rid] = out[i, :r.max_new]
-                r.done = True
+    def _pack(self, r: Request) -> np.ndarray:
+        """Right-align the prompt in its own bucket; over-long prompts keep
+        their LAST ``bucket`` tokens (recency wins for generation) with a
+        logged warning — never a negative-offset slice."""
+        bucket = self._bucket(len(r.prompt))
+        prompt = r.prompt
+        if len(prompt) > bucket:
+            log.warning(
+                "rid=%d prompt len %d exceeds largest bucket %d; "
+                "keeping the last %d tokens", r.rid, len(prompt), bucket, bucket)
+            prompt = prompt[-bucket:]
+            self.stats["truncated"] += 1
+        toks = np.zeros(bucket, np.int32)
+        toks[bucket - len(prompt):] = prompt
+        return toks
+
+    # -- the scheduler loop ---------------------------------------------
+
+    def run(self, gen: GenerationConfig | None = None,
+            on_complete: Callable[[int, np.ndarray], None] | None = None,
+            key=None):
+        """Drain the queue; returns {rid: tokens}.
+
+        ``gen`` supplies sampling/EOS config; per-request token budgets are
+        ``min(request.max_new, gen.max_new_tokens)`` (request.max_new alone
+        when ``gen`` is None).  ``on_complete(rid, tokens)`` streams each
+        request's result the step it finishes."""
+        eng = self.engine
+        B = eng.batch
+        results: dict[int, np.ndarray] = {}
+        if not self.queue:
+            return results
+        step_gen = gen if gen is not None else GenerationConfig()
+        key = key if key is not None else jax.random.PRNGKey(0)
+        # events/stats describe ONE drain (that is what the drivers print);
+        # they reset here so step indices stay unambiguous across runs
+        self.events = []
+        self.stats = {"steps": 0, "refills": 0, "truncated": 0}
+
+        eng.reset_all()
+        slots: list[_Slot | None] = [None] * B
+        tok = np.zeros(B, np.int32)
+        pos = np.zeros(B, np.int64)
+        active = np.zeros(B, bool)
+        step = 0
+        maxpos = eng.max_len - 1
+
+        def _budget(r: Request) -> int:
+            return (min(r.max_new, gen.max_new_tokens) if gen is not None
+                    else r.max_new)
+
+        def _retire(s: int):
+            slot = slots[s]
+            r = slot.req
+            r.done = True
+            results[r.rid] = np.asarray(r.out, np.int32)
+            self.events.append(("done", r.rid, s, step))
+            if on_complete is not None:
+                on_complete(r.rid, results[r.rid])
+            slots[s] = None
+            active[s] = False
+
+        def _admit(s: int) -> bool:
+            """Pull the next request into slot ``s``; returns True if the
+            slot ended up active (a request can finish at its very first
+            token — then the slot is retired and the next one is tried)."""
+            nonlocal key
+            while self.queue:
+                r = self.queue.pop(0)
+                if _budget(r) <= 0:  # zero-token request: complete empty
+                    r.done = True
+                    results[r.rid] = np.zeros(0, np.int32)
+                    self.events.append(("done", r.rid, s, step))
+                    if on_complete is not None:
+                        on_complete(r.rid, results[r.rid])
+                    continue
+                packed = self._pack(r)
+                # last cache write lands at bucket + budget - 2 (the final
+                # emitted token is never fed back), so clamping only kicks
+                # in beyond max_len + 1
+                if len(packed) + _budget(r) > eng.max_len + 1:
+                    log.warning(
+                        "rid=%d bucket %d + max_new %d exceeds max_len %d; "
+                        "late cache writes clamp to the last position",
+                        r.rid, len(packed), _budget(r), eng.max_len)
+                key, sub = jax.random.split(key)
+                first = eng.prefill_slot(s, packed, step_gen, sub)
+                kind = "refill" if step > 0 else "admit"
+                self.events.append((kind, r.rid, s, step))
+                if kind == "refill":
+                    self.stats["refills"] += 1
+                slots[s] = _Slot(req=r, budget=_budget(r))
+                r.out.append(first)
+                slots[s].budget -= 1
+                tok[s] = first
+                pos[s] = len(packed)
+                active[s] = True
+                hit_eos = (step_gen.eos_id is not None
+                           and first == step_gen.eos_id)
+                if slots[s].budget <= 0 or hit_eos:
+                    _retire(s)   # degenerate: done on the prefill token
+                    continue
+                return True
+            return False
+
+        while True:
+            for s in range(B):
+                if slots[s] is None:
+                    _admit(s)
+            if not active.any():
+                break
+            emitted, key = eng.step_slots(step_gen, tok, pos, active, key)
+            step += 1
+            self.stats["steps"] += 1
+            for s in range(B):
+                if slots[s] is None:
+                    continue
+                t = int(emitted[s])
+                slots[s].req.out.append(t)
+                slots[s].budget -= 1
+                tok[s] = t
+                pos[s] = min(pos[s] + 1, maxpos)
+                hit_eos = step_gen.eos_id is not None and t == step_gen.eos_id
+                if slots[s].budget <= 0 or hit_eos:
+                    _retire(s)
         return results

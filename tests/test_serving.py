@@ -1,4 +1,7 @@
-"""Serving engine: generation shapes, greedy determinism, batcher."""
+"""Serving: generation shapes, greedy determinism, EOS semantics, cache
+lifecycle, and the slot-based continuous-batching scheduler."""
+import logging
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +11,8 @@ from repro.core.engine import EulerConfig
 from repro.models.config import ModelConfig
 from repro.models.layers import Ctx
 from repro.models.transformer import Model
-from repro.serving import GenerationConfig, RequestBatcher, ServeEngine
+from repro.serving import (GenerationConfig, QueueFullError, RequestBatcher,
+                           ServeEngine)
 
 CFG = ModelConfig(name="srv", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
@@ -16,13 +20,30 @@ CFG = ModelConfig(name="srv", family="dense", n_layers=2, d_model=64,
 
 
 @pytest.fixture(scope="module")
-def engine():
+def model_params():
     m = Model(CFG, EulerConfig(mode="exact"), remat=False)
     params = m.init(jax.random.PRNGKey(0))
-    ctx = Ctx(ecfg=m.ecfg)
+    return m, params, Ctx(ecfg=m.ecfg)
+
+
+@pytest.fixture(scope="module")
+def engine(model_params):
+    m, params, ctx = model_params
     return ServeEngine(m, params, ctx, max_len=64, batch=4,
                        cache_dtype=jnp.float32)
 
+
+@pytest.fixture()
+def engine2(model_params):
+    """batch=2 engine (fresh per test: scheduler tests mutate its cache)."""
+    m, params, ctx = model_params
+    return ServeEngine(m, params, ctx, max_len=64, batch=2,
+                       cache_dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# whole-batch generate
+# ---------------------------------------------------------------------------
 
 def test_generate_shapes(engine):
     prompts = jnp.ones((4, 8), jnp.int32)
@@ -57,6 +78,20 @@ def test_greedy_matches_stepwise(engine):
     np.testing.assert_array_equal(out, np.stack(toks, 1))
 
 
+def test_decode_step_vector_positions_match_scalar(engine):
+    """decode_step with a [B] position vector == scalar position decode."""
+    m, params, ctx = engine.model, engine.params, engine.ctx
+    prompts = jnp.asarray(np.arange(32).reshape(4, 8) % CFG.vocab, jnp.int32)
+    c1 = m.init_cache(4, 64, dtype=jnp.float32)
+    logits, c1 = m.prefill(params, prompts, ctx, c1)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    c2 = jax.tree.map(jnp.copy, c1)
+    l_scalar, _ = m.decode_step(params, tok, jnp.int32(8), c1, ctx)
+    l_vec, _ = m.decode_step(params, tok, jnp.full((4,), 8, jnp.int32), c2, ctx)
+    np.testing.assert_allclose(np.asarray(l_scalar), np.asarray(l_vec),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_temperature_sampling_runs(engine):
     prompts = jnp.ones((4, 8), jnp.int32)
     out = engine.generate(prompts, GenerationConfig(max_new_tokens=4,
@@ -65,6 +100,88 @@ def test_temperature_sampling_runs(engine):
     assert out.shape == (4, 4)
 
 
+# ---------------------------------------------------------------------------
+# EOS semantics (regression: eos_id used to be dead code)
+# ---------------------------------------------------------------------------
+
+def test_eos_stops_and_pads(engine):
+    prompts = jnp.asarray(np.arange(32).reshape(4, 8) % CFG.vocab, jnp.int32)
+    base = np.asarray(engine.generate(prompts,
+                                      GenerationConfig(max_new_tokens=6)))
+    eos = int(base[0, 1])  # row 0 emits this at step 1
+    out = np.asarray(engine.generate(
+        prompts, GenerationConfig(max_new_tokens=6, eos_id=eos, pad_id=0)))
+    assert out.shape == base.shape
+    for r in range(4):
+        hits = np.nonzero(base[r] == eos)[0]
+        if hits.size:  # identical up to + including EOS, pad afterwards
+            j = hits[0]
+            np.testing.assert_array_equal(out[r, :j + 1], base[r, :j + 1])
+            assert (out[r, j + 1:] == 0).all()
+        else:
+            np.testing.assert_array_equal(out[r], base[r])
+
+
+def test_eos_early_exit(engine):
+    """All rows share one prompt => all hit EOS together => decode stops."""
+    prompts = jnp.tile(jnp.asarray(np.arange(8) % CFG.vocab, jnp.int32),
+                       (4, 1))
+    base = np.asarray(engine.generate(prompts,
+                                      GenerationConfig(max_new_tokens=12)))
+    eos = int(base[0, 2])
+    out = np.asarray(engine.generate(
+        prompts, GenerationConfig(max_new_tokens=12, eos_id=eos)))
+    assert out.shape == (4, 12)
+    assert (out[:, 2] == eos).all() and (out[:, 3:] == 0).all()
+    # every row was done by step 2, so the loop must have exited early
+    assert engine.last_decode_steps < 11
+
+
+# ---------------------------------------------------------------------------
+# cache lifecycle (regression: self.cache leaked across generate calls)
+# ---------------------------------------------------------------------------
+
+def test_cache_reset_between_generates(engine):
+    """Identical back-to-back calls — with a different-length generate in
+    between trying to poison the cache — must return identical tokens."""
+    p1 = jnp.asarray(np.arange(32).reshape(4, 8) % CFG.vocab, jnp.int32)
+    p2 = jnp.asarray((np.arange(32).reshape(4, 8) * 7 + 3) % CFG.vocab,
+                     jnp.int32)
+    a = np.asarray(engine.generate(p1, GenerationConfig(max_new_tokens=6)))
+    engine.generate(p2, GenerationConfig(max_new_tokens=12))  # poison attempt
+    b = np.asarray(engine.generate(p1, GenerationConfig(max_new_tokens=6)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_ssm_cache_reset_slot():
+    """ssm_cache_reset zeroes one slot's recurrent state — the SSM-side
+    lifecycle primitive (stale SSM state, unlike KV, is not masked out by
+    any position-validity check)."""
+    from repro.models import ssm as S
+    cfg = ModelConfig(name="s", family="ssm", d_model=16, ssm_state=4,
+                      ssm_head_dim=8)
+    c = jax.tree.map(lambda a: a + 1.0, S.ssm_cache_init(cfg, 3))
+    c = S.ssm_cache_reset(c, 1)
+    for leaf in jax.tree.leaves(c):
+        assert not np.asarray(leaf[1]).any()
+        assert np.asarray(leaf[0]).all() and np.asarray(leaf[2]).all()
+    for leaf in jax.tree.leaves(S.ssm_cache_reset(c)):
+        assert not np.asarray(leaf).any()
+
+
+def test_reset_slot_zeroes_one_row(engine):
+    prompts = jnp.asarray(np.arange(32).reshape(4, 8) % CFG.vocab, jnp.int32)
+    engine.generate(prompts, GenerationConfig(max_new_tokens=2))
+    engine.reset_slot(1)
+    for leaf in jax.tree.leaves(engine.cache):
+        assert not np.asarray(leaf[:, 1]).any()   # slot 1 zeroed
+        assert np.asarray(leaf[:, 0]).any()       # slot 0 untouched
+
+
+# ---------------------------------------------------------------------------
+# batcher / scheduler
+# ---------------------------------------------------------------------------
+
 def test_batcher_drains_queue(engine):
     b = RequestBatcher(engine, prompt_buckets=(8, 16))
     rids = [b.submit(np.arange(3 + i) % CFG.vocab, max_new=4)
@@ -72,3 +189,170 @@ def test_batcher_drains_queue(engine):
     res = b.run()
     assert sorted(res) == sorted(rids)
     assert all(v.shape == (4,) for v in res.values())
+
+
+def test_batcher_partial_group(engine):
+    """Fewer queued requests than slots: empty slots stay inactive."""
+    b = RequestBatcher(engine, prompt_buckets=(8,))
+    rids = [b.submit(np.arange(4 + i) % CFG.vocab, max_new=3)
+            for i in range(2)]  # 2 requests, batch=4
+    res = b.run()
+    assert sorted(res) == sorted(rids)
+    assert all(len(v) == 3 for v in res.values())
+
+
+def test_batcher_per_request_max_new(engine):
+    """Budgets are per request, not group max; shorter ones finish early."""
+    b = RequestBatcher(engine, prompt_buckets=(8,))
+    r_short = b.submit(np.arange(5) % CFG.vocab, max_new=2)
+    r_long = b.submit(np.arange(6) % CFG.vocab, max_new=9)
+    res = b.run()
+    assert len(res[r_short]) == 2
+    assert len(res[r_long]) == 9
+    done = {rid: step for ev, rid, slot, step in b.events if ev == "done"}
+    assert done[r_short] < done[r_long]
+
+
+def test_batcher_long_prompt_truncates_with_warning(engine2, caplog):
+    """Regression: len(prompt) > max(buckets) used to corrupt the packed
+    buffer via a negative slice offset; now it keeps the LAST bucket tokens
+    and logs a warning."""
+    rng = np.random.default_rng(1)
+    long_prompt = rng.integers(0, CFG.vocab, 27)  # > max bucket 16
+    b = RequestBatcher(engine2, prompt_buckets=(8, 16))
+    with caplog.at_level(logging.WARNING, logger="repro.serving"):
+        rid = b.submit(long_prompt, max_new=4)
+        out = b.run()[rid]
+    assert any("exceeds largest bucket" in r.message for r in caplog.records)
+    assert b.stats["truncated"] == 1
+    # equivalent to submitting the last 16 tokens directly
+    b2 = RequestBatcher(engine2, prompt_buckets=(8, 16))
+    rid2 = b2.submit(long_prompt[-16:], max_new=4)
+    np.testing.assert_array_equal(b2.run()[rid2], out)
+
+
+def test_batcher_rejects_bucket_geq_max_len(engine2):
+    with pytest.raises(ValueError):
+        RequestBatcher(engine2, prompt_buckets=(64,))  # == max_len
+
+
+def test_batcher_max_queue(engine2):
+    b = RequestBatcher(engine2, prompt_buckets=(8,), max_queue=2)
+    b.submit(np.arange(3), max_new=2)
+    b.submit(np.arange(4), max_new=2)
+    with pytest.raises(QueueFullError):
+        b.submit(np.arange(5), max_new=2)
+
+
+def test_zero_token_requests(engine2):
+    """max_new=0 completes empty (regression: used to emit 1 token)."""
+    out = engine2.generate(jnp.ones((2, 8), jnp.int32),
+                           GenerationConfig(max_new_tokens=0))
+    assert out.shape == (2, 0)
+    b = RequestBatcher(engine2, prompt_buckets=(8,))
+    r0 = b.submit(np.arange(4) % CFG.vocab, max_new=0)
+    r1 = b.submit(np.arange(5) % CFG.vocab, max_new=3)
+    res = b.run()
+    assert len(res[r0]) == 0
+    assert len(res[r1]) == 3
+
+
+def test_events_and_stats_reset_per_run(engine2):
+    b = RequestBatcher(engine2, prompt_buckets=(8,))
+    b.submit(np.arange(4) % CFG.vocab, max_new=2)
+    b.submit(np.arange(5) % CFG.vocab, max_new=2)
+    b.submit(np.arange(6) % CFG.vocab, max_new=2)
+    b.run()
+    assert b.stats["refills"] == 1
+    b.submit(np.arange(4) % CFG.vocab, max_new=2)
+    b.run()  # second drain: events/stats describe this run only
+    assert b.stats["refills"] == 0 and b.stats["steps"] == 1
+    assert [ev for ev, *_ in b.events] == ["admit", "done"]
+
+
+def test_batcher_streaming_on_complete(engine2):
+    b = RequestBatcher(engine2, prompt_buckets=(8,))
+    rids = [b.submit(np.arange(4 + i) % CFG.vocab, max_new=3 + i)
+            for i in range(3)]
+    seen = []
+    res = b.run(on_complete=lambda rid, toks: seen.append((rid, len(toks))))
+    assert sorted(r for r, _ in seen) == sorted(rids)
+    assert all(len(res[r]) == n for r, n in seen)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance test: continuous batching proper
+# ---------------------------------------------------------------------------
+
+def _single_request_baseline(engine, prompt, max_new, gen=None):
+    b = RequestBatcher(engine, prompt_buckets=(8, 16))
+    rid = b.submit(prompt, max_new=max_new)
+    return b.run(gen)[rid]
+
+
+def test_continuous_batching_acceptance(engine2):
+    """batch=2, 4 queued requests of unequal lengths: a finished slot is
+    refilled mid-stream, every rid's tokens match its single-request
+    baseline, and eos_id stops (and pads after) EOS."""
+    rng = np.random.default_rng(7)
+    specs = [(5, 3), (9, 7), (12, 5), (3, 6)]  # (prompt_len, max_new)
+    prompts = [rng.integers(0, CFG.vocab, n) for n, _ in specs]
+
+    b = RequestBatcher(engine2, prompt_buckets=(8, 16))
+    rids = [b.submit(p, max_new=mn) for p, (_, mn) in zip(prompts, specs)]
+    res = b.run()
+
+    # 1. a finished slot was refilled while the other slot was mid-stream:
+    #    some refill happens at a step where another request is still live
+    #    (it completes at a strictly later step).
+    refills = [(rid, slot, step) for ev, rid, slot, step in b.events
+               if ev == "refill"]
+    done_step = {rid: step for ev, rid, slot, step in b.events if ev == "done"}
+    assert refills, "no slot was refilled mid-stream"
+    assert any(any(done_step[r] > step for r in rids if r != rid)
+               for rid, _, step in refills)
+
+    # 2. every rid's tokens match its single-request baseline run
+    for rid, p, (_, mn) in zip(rids, prompts, specs):
+        assert len(res[rid]) == mn
+        np.testing.assert_array_equal(
+            res[rid], _single_request_baseline(engine2, p, mn),
+            err_msg=f"rid={rid} diverged from its single-request run")
+
+    # 3. EOS: pick a token the longest request emits mid-stream and rerun
+    #    the same queue with eos_id set — that request stops at (and
+    #    includes) EOS, and emits nothing after it.
+    eos_rid = rids[1]
+    eos = int(res[eos_rid][2])
+    b2 = RequestBatcher(engine2, prompt_buckets=(8, 16))
+    rids2 = [b2.submit(p, max_new=mn) for p, (_, mn) in zip(prompts, specs)]
+    res2 = b2.run(GenerationConfig(max_new_tokens=16, eos_id=eos))
+    for rid, rid2 in zip(rids, rids2):
+        old = res[rid]
+        hits = np.nonzero(old == eos)[0]
+        if hits.size:
+            j = hits[0]
+            np.testing.assert_array_equal(res2[rid2], old[:j + 1])
+            assert res2[rid2][-1] == eos
+        else:
+            np.testing.assert_array_equal(res2[rid2], old)
+    assert (res2[rids2[1]] == eos).any()
+
+
+def test_refill_slot_no_state_leak(engine2):
+    """rid/result alignment after refill: a request decoded in a slot that
+    previously held a *different* request must equal its baseline."""
+    rng = np.random.default_rng(3)
+    p_a = rng.integers(0, CFG.vocab, 4)
+    p_b = rng.integers(0, CFG.vocab, 4)
+    p_c = rng.integers(0, CFG.vocab, 6)
+    b = RequestBatcher(engine2, prompt_buckets=(8,))
+    ra = b.submit(p_a, max_new=2)   # finishes first -> slot refilled with c
+    rb = b.submit(p_b, max_new=8)
+    rc = b.submit(p_c, max_new=4)
+    res = b.run()
+    assert [ev for ev, *_ in b.events].count("refill") == 1
+    np.testing.assert_array_equal(
+        res[rc], _single_request_baseline(engine2, p_c, 4))
+    np.testing.assert_array_equal(
+        res[rb], _single_request_baseline(engine2, p_b, 8))
