@@ -1,114 +1,21 @@
-"""Soft-error resilience analysis of (bounded) posit — paper Eqs. (3)-(7).
+"""Compatibility alias: the ECE analysis moved to ``repro.reliability.ece``
+when reliability grew into a package (fault injection + serving campaign).
+Import from ``repro.reliability`` in new code.
 
-Expected Catastrophic Error (ECE):
-
-    eta = E[ | log2|x_o| - log2|x_f| | ]
-
-for a single uniformly-located bit flip on a uniformly-drawn valid pattern.
-We evaluate the expectation *exactly* for N=8/16 (full enumeration of every
-(pattern, bit) pair, vectorized through the bit-accurate codec) and by
-large-sample Monte-Carlo for N=32.  The evaluation is decomposed by bit role
-(regime run bit / regime terminator / exponent / fraction / sign), which
-mirrors the G1/G2/G3 decomposition of Eq. (5).
-
-Key reproduced properties:
-  * eta is monotonically increasing in the regime bound R (Eq. 6),
-  * Gamma_B = eta_std / eta_B > 1 for the paper's bounds (Eq. 7).
+Resolution is lazy (module ``__getattr__``): ``repro.core`` imports this shim
+while ``repro.reliability.ece`` itself imports ``repro.core`` — an eager
+re-export would deadlock whichever side is imported first.
 """
-from __future__ import annotations
+_NAMES = ("ece", "ece_vs_regime_bound", "improvement_factor",
+          "_classify_bits", "_log2_magnitude")
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from . import posit as P
+__all__ = ["ece", "ece_vs_regime_bound", "improvement_factor"]
 
 
-def _log2_magnitude(fields, W):
-    """Exact log2|x| from decoded fields (scale + log2 mantissa)."""
-    mant = 1.0 + fields["frac"].astype(jnp.float32) * (2.0 ** -W)
-    return fields["scale"].astype(jnp.float32) + jnp.log2(mant)
-
-
-def _classify_bits(pats, cfg: P.PositConfig):
-    """Role of each bit position for each pattern: 0=sign 1=run 2=term 3=exp 4=frac."""
-    N = cfg.n_bits
-    f = P.decode_fields(pats, cfg)
-    # regime width from the decoded pattern
-    p = jnp.asarray(pats, jnp.uint32)
-    sign = (p >> (N - 1)) & 1
-    body = jnp.where(sign == 1, (jnp.uint32(0) - p), p) & P._mask(N - 1)
-    u = (body << (32 - (N - 1))).astype(jnp.uint32)
-    r0 = (body >> (N - 2)) & jnp.uint32(1)
-    run = jnp.minimum(jax.lax.clz(jnp.where(r0 == 1, ~u, u)).astype(jnp.int32), N - 1)
-    sat = run >= cfg.rcap
-    rw = jnp.where(sat, cfg.rcap, jnp.minimum(run, cfg.rcap) + 1)
-    roles = []
-    for bit in range(N):  # bit index from MSB: 0 = sign
-        if bit == 0:
-            roles.append(jnp.zeros_like(run))
-            continue
-        j = bit - 1  # position within body, from its MSB
-        role = jnp.where(j < rw - jnp.where(sat, 0, 1), 1,            # run bit
-               jnp.where((j < rw) & ~sat, 2,                          # terminator
-               jnp.where(j < rw + cfg.es, 3, 4)))                     # exp | frac
-        roles.append(role)
-    return jnp.stack(roles, -1), f
-
-
-def ece(cfg: P.PositConfig, n_samples: int | None = None, seed: int = 0):
-    """ECE and its per-bit-role decomposition.
-
-    Returns dict with overall eta, per-role etas (G-decomposition), and the
-    exceptional-fault rate (flips that hit/produce zero or NaR).
-    """
-    N = cfg.n_bits
-    if N <= 16 and n_samples is None:
-        pats = jnp.arange(1 << N, dtype=jnp.uint32)
-    else:
-        n = n_samples or 1_000_000
-        pats = jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, 1 << N).astype(jnp.uint32)
-
-    f0 = P.decode_fields(pats, cfg)
-    valid = ~(f0["is_zero"] | f0["is_nar"])
-    W = cfg.frac_window
-    lg0 = _log2_magnitude(f0, W)
-    roles, _ = _classify_bits(pats, cfg)
-
-    deltas, role_flat, ok_flat = [], [], []
-    for bit in range(N):
-        flipped = pats ^ (jnp.uint32(1) << (N - 1 - bit))
-        f1 = P.decode_fields(flipped, cfg)
-        ok = valid & ~(f1["is_zero"] | f1["is_nar"])
-        lg1 = _log2_magnitude(f1, W)
-        deltas.append(jnp.where(ok, jnp.abs(lg0 - lg1), 0.0))
-        role_flat.append(roles[:, bit])
-        ok_flat.append(ok)
-
-    d = jnp.stack(deltas, -1)
-    r = jnp.stack(role_flat, -1)
-    ok = jnp.stack(ok_flat, -1)
-    total_ok = jnp.sum(ok)
-    eta = jnp.sum(d) / jnp.maximum(total_ok, 1)
-    out = {"eta": float(eta),
-           "exceptional_rate": float(1.0 - total_ok / (valid.sum() * N))}
-    names = {0: "sign", 1: "regime_run", 2: "regime_term", 3: "exponent", 4: "fraction"}
-    for rid, name in names.items():
-        mask = ok & (r == rid)
-        cnt = jnp.maximum(jnp.sum(mask), 1)
-        out[f"eta_{name}"] = float(jnp.sum(jnp.where(mask, d, 0.0)) / cnt)
-    return out
-
-
-def improvement_factor(width: int, n_samples: int | None = None) -> float:
-    """Gamma_B (Eq. 7): eta_std / eta_bounded for the paper's (N, es, R)."""
-    std, bnd = P.BY_WIDTH[width]
-    return ece(std, n_samples)["eta"] / ece(bnd, n_samples)["eta"]
-
-
-def ece_vs_regime_bound(width: int, bounds, n_samples: int | None = None):
-    """eta_B as a function of R — must be monotone increasing (Eq. 6)."""
-    es = {8: 0, 16: 1, 32: 2}[width]
-    return {r: ece(P.PositConfig(width, es, r), n_samples)["eta"] for r in bounds}
+def __getattr__(name):
+    if name in _NAMES:
+        import importlib
+        # import_module (not ``from repro.reliability import ece``): the
+        # package __init__ shadows the submodule attribute with the function
+        return getattr(importlib.import_module("repro.reliability.ece"), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -137,6 +137,11 @@ def restore(ckpt_dir: str, target_tree, *, shardings=None, step: int | None = No
     out = []
     for rec, tgt, shd in zip(manifest["leaves"], leaves, shard_leaves):
         arr = np.load(os.path.join(d, "arrays", f"{rec['idx']}.npy"))
+        if arr.dtype.kind == "V" and str(arr.dtype) != rec["dtype"]:
+            # np.save writes extension dtypes (bfloat16, float8_*) as raw
+            # void bytes; reinterpret with the manifest dtype (registered by
+            # ml_dtypes, which jax always brings in)
+            arr = arr.view(np.dtype(rec["dtype"]))
         if verify:
             crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
             if crc != rec["crc32"]:

@@ -41,6 +41,7 @@ class HostState:
     last_beat: float
     last_step: int = 0
     step_ewma: float | None = None
+    step_start: float = 0.0   # clock at the last step advance (EWMA anchor)
     slow_streak: int = 0
     dead: bool = False
 
@@ -51,19 +52,30 @@ class HeartbeatMonitor:
         self.clock = clock
         self.dead_after_s = dead_after_s
         now = clock()
-        self.hosts = {h: HostState(last_beat=now) for h in hosts}
+        self.hosts = {h: HostState(last_beat=now, step_start=now)
+                      for h in hosts}
 
     def beat(self, host: str, step: int):
+        """Record liveness; update the per-step EWMA only on step advance.
+
+        Step time is measured from ``step_start`` (the previous advance), not
+        from the previous heartbeat — liveness-only beats (same step) must
+        neither reset the timer (which would under-count the eventual step
+        and could starve the EWMA seed forever) nor feed inter-heartbeat
+        gaps into the EWMA.  A step regression (restarted host) restarts the
+        timer without polluting the history."""
         st = self.hosts[host]
         now = self.clock()
-        if st.step_ewma is None:
-            st.step_ewma = None if step == st.last_step else (
-                (now - st.last_beat) / max(step - st.last_step, 1))
-        else:
-            dt = (now - st.last_beat) / max(step - st.last_step, 1)
-            st.step_ewma = 0.8 * st.step_ewma + 0.2 * dt
+        if step > st.last_step:
+            dt = (now - st.step_start) / (step - st.last_step)
+            st.step_ewma = dt if st.step_ewma is None else (
+                0.8 * st.step_ewma + 0.2 * dt)
+            st.step_start = now
+            st.last_step = step
+        elif step < st.last_step:
+            st.step_start = now
+            st.last_step = step
         st.last_beat = now
-        st.last_step = step
         st.dead = False
 
     def dead_hosts(self) -> list[str]:

@@ -18,8 +18,8 @@ from repro.distributed import checkpoint as CK
 from repro.launch.train import build_numerics
 from repro.models.layers import Ctx
 from repro.models.transformer import Model
-from repro.serving import (GenerationConfig, QueueFullError, RequestBatcher,
-                           ServeEngine)
+from repro.serving import (DurableBatcher, GenerationConfig, QueueFullError,
+                           RequestBatcher, ServeEngine)
 
 
 def main(argv=None):
@@ -45,6 +45,14 @@ def main(argv=None):
     ap.add_argument("--stream", action="store_true",
                     help="print each request the step it completes")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="durable serving: snapshot the scheduler state here "
+                         "at step boundaries (enables --resume)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="decode steps between scheduler snapshots")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the drain from --snapshot-dir instead of "
+                         "submitting fresh requests")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.WARNING)
@@ -68,32 +76,43 @@ def main(argv=None):
     ctx = Ctx(ecfg=ecfg, numerics=nctx)
     eng = ServeEngine(model, params, ctx, max_len=args.max_len,
                       batch=args.batch)
-    batcher = RequestBatcher(eng, prompt_buckets=(32, 128),
-                             max_queue=args.max_queue or None)
+    if args.snapshot_dir:
+        batcher = DurableBatcher(eng, prompt_buckets=(32, 128),
+                                 max_queue=args.max_queue or None,
+                                 ckpt_dir=args.snapshot_dir,
+                                 snapshot_every=args.snapshot_every)
+    else:
+        batcher = RequestBatcher(eng, prompt_buckets=(32, 128),
+                                 max_queue=args.max_queue or None)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
-    dropped = 0
-    for i in range(args.requests):
-        plen = int(rng.integers(4, 24))
-        try:
-            batcher.submit(rng.integers(0, cfg.vocab, plen),
-                           max_new=args.max_new)
-        except QueueFullError:  # admission control: shed load, keep serving
-            dropped += 1
-    if dropped:
-        print(f"queue full: dropped {dropped}/{args.requests} requests "
-              f"(max_queue={args.max_queue})")
 
     def on_complete(rid, toks):
         if args.stream:
             print(f"  [{time.time() - t0:6.2f}s] req {rid} done "
                   f"({len(toks)} tokens): {toks[:8]}...")
 
-    results = batcher.run(
-        GenerationConfig(max_new_tokens=args.max_new,
-                         temperature=args.temperature,
-                         eos_id=None if args.eos_id < 0 else args.eos_id),
-        on_complete=on_complete)
+    if args.resume:
+        if not args.snapshot_dir:
+            raise SystemExit("--resume requires --snapshot-dir")
+        results = batcher.resume(on_complete=on_complete)
+    else:
+        dropped = 0
+        for i in range(args.requests):
+            plen = int(rng.integers(4, 24))
+            try:
+                batcher.submit(rng.integers(0, cfg.vocab, plen),
+                               max_new=args.max_new)
+            except QueueFullError:  # admission control: shed, keep serving
+                dropped += 1
+        if dropped:
+            print(f"queue full: dropped {dropped}/{args.requests} requests "
+                  f"(max_queue={args.max_queue})")
+        results = batcher.run(
+            GenerationConfig(max_new_tokens=args.max_new,
+                             temperature=args.temperature,
+                             eos_id=None if args.eos_id < 0 else args.eos_id),
+            on_complete=on_complete)
     dt = time.time() - t0
     toks = sum(len(v) for v in results.values())
     print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "

@@ -152,7 +152,18 @@ def resolve(op: str = "dot_general", path: str | None = None,
 def _dispatch(op: str, ctx: NumericsContext | None, path: str | None):
     nctx = ctx if ctx is not None else current()
     p = path if path is not None else current_path()
+    # record the resolved (op, path) for wrapping backends (the Backend op
+    # protocol doesn't carry them): read via last_dispatch() during the call
+    _TLS.last_dispatch = (op, p)
     return get_backend(nctx.backend), nctx.cfg_for(p, op)
+
+
+def last_dispatch() -> tuple[str, str]:
+    """(op kind, layer path) of the most recent op dispatch on this thread.
+
+    Wrapping backends (e.g. the fault-injection backend) use this to match
+    per-op/per-path rules; valid during the dispatched backend call."""
+    return getattr(_TLS, "last_dispatch", ("dot_general", current_path()))
 
 
 # --------------------------------------------------------------------------

@@ -158,6 +158,71 @@ class PallasBackend(LaxRefBackend):
         return out.reshape(lhs_free + rhs_free).astype(cfg.dtype)
 
 
+class FaultyBackend(Backend):
+    """Fault-injection wrapper: corrupt posit words, then run the base op.
+
+    When a :class:`repro.reliability.faults.FaultPlan` is active (trace-time
+    ``faults.inject(plan, key, step)`` — the serving engine threads key/step
+    through its decode scan) and matches the dispatched (layer path, op
+    kind), the selected operand is encoded to posit words with the
+    bit-accurate codec, seeded single-bit flips of the plan's bit role are
+    applied, and the corrupted values are handed to the wrapped backend — so
+    the flip lands on exactly the word the lax_ref or pallas engine would
+    have consumed.  Exact-mode ops (no posit words in the datapath) are
+    immune by construction.
+    """
+
+    def __init__(self, base: "str | Backend"):
+        self.base = get_backend(base)
+        self.name = f"faulty:{self.base.name}"
+
+    def _corrupt(self, a, b, cfg: EulerConfig):
+        from repro.reliability import faults as _F
+        from . import api as _api
+        ctx = _F.current()
+        if ctx is None or cfg.mode not in ("euler", "posit", "quant_only"):
+            return a, b
+        plan, key, step = ctx
+        op, path = _api.last_dispatch()
+        if not plan.matches(path, op):
+            return a, b
+        if plan.operand in ("a", "both"):
+            a = _F.corrupt(a, cfg, plan, key, step,
+                           salt=_F.call_salt(path, op, "a"))
+        if plan.operand in ("b", "both"):
+            b = _F.corrupt(b, cfg, plan, key, step,
+                           salt=_F.call_salt(path, op, "b"))
+        return a, b
+
+    def dot_general(self, a, b, dimension_numbers, cfg: EulerConfig):
+        a, b = self._corrupt(a, b, cfg)
+        return self.base.dot_general(a, b, dimension_numbers, cfg)
+
+    def matmul(self, a, b, cfg: EulerConfig):
+        a, b = self._corrupt(a, b, cfg)
+        return self.base.matmul(a, b, cfg)
+
+    def qk(self, q, k, cfg: EulerConfig):
+        q, k = self._corrupt(q, k, cfg)
+        return self.base.qk(q, k, cfg)
+
+    def pv(self, p, v, cfg: EulerConfig):
+        p, v = self._corrupt(p, v, cfg)
+        return self.base.pv(p, v, cfg)
+
+    def elementwise(self, a, b, cfg: EulerConfig):
+        a, b = self._corrupt(a, b, cfg)
+        return self.base.elementwise(a, b, cfg)
+
+
+def faulty(base: "str | Backend") -> FaultyBackend:
+    """The fault-injection wrapper around ``base``, registered (memoized)
+    under ``"faulty:<base>"`` so policies/CLIs can name it like any other
+    backend."""
+    wrapped = FaultyBackend(base)
+    return _BACKENDS.setdefault(wrapped.name, wrapped)
+
+
 _BACKENDS: dict[str, Backend] = {}
 
 
@@ -168,12 +233,17 @@ def register_backend(name: str, backend: Backend) -> Backend:
 
 
 def get_backend(name: str | Backend) -> Backend:
-    """Look up a backend by name (instances pass through unchanged)."""
+    """Look up a backend by name (instances pass through unchanged).
+
+    ``"faulty:<base>"`` names resolve (and self-register) on demand to the
+    fault-injection wrapper around ``<base>``."""
     if isinstance(name, Backend):
         return name
     try:
         return _BACKENDS[name]
     except KeyError:
+        if name.startswith("faulty:"):
+            return faulty(name.split(":", 1)[1])
         raise KeyError(f"unknown numerics backend {name!r}; "
                        f"available: {sorted(_BACKENDS)}") from None
 

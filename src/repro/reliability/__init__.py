@@ -1,0 +1,21 @@
+"""Reliability subsystem: static ECE analysis, live fault injection, and the
+serving-scale campaign.
+
+* ``ece`` — the paper's Eqs. (3)-(7): Expected Catastrophic Error of single
+  bit flips on isolated patterns, decomposed by bit role (promoted from the
+  old ``repro.core.reliability``, which stays as an alias).
+* ``faults`` — :class:`FaultPlan` + the seeded flip machinery applied to live
+  encoded posit words by the ``faulty:<base>`` numerics backend.
+* ``campaign`` — drives live continuous-batching traffic under fault plans
+  and measures application-level corruption (import it explicitly: it pulls
+  in models/serving, which this package root deliberately does not).
+"""
+from .ece import (ece, ece_vs_regime_bound, improvement_factor)
+from .faults import (FaultPlan, ROLES, call_salt, corrupt, current,
+                     flip_words, inject, role_mask)
+
+__all__ = [
+    "ece", "ece_vs_regime_bound", "improvement_factor",
+    "FaultPlan", "ROLES", "call_salt", "corrupt", "current", "flip_words",
+    "inject", "role_mask",
+]

@@ -1,0 +1,243 @@
+"""Live fault injection on encoded posit words.
+
+The ECE analysis (``ece.py``) evaluates bit flips on isolated patterns; this
+module injects the same flips into the *live* datapath: a :class:`FaultPlan`
+describes which ops to hit (layer-path pattern + op kind), which bit role to
+flip (the G1/G2/G3 decomposition of paper Eq. 5), at what per-word rate and
+in which decode-step window.  The plan is applied by the ``faulty:<base>``
+wrapping backend (``repro.numerics.backends``): an op's operand tensor is
+encoded to posit words with the bit-accurate codec, a seeded single-bit flip
+is applied to selected words, and the corrupted values re-enter the base
+backend — so a flip lands on exactly the word the lax_ref / pallas engine
+would have consumed.
+
+Everything here is jit-safe: the plan is a frozen (hashable) dataclass that
+closes over traced computations as a static; the PRNG key and step are
+traced values threaded in by the caller (``ServeEngine`` puts the fault step
+in its decode-scan carry) through the trace-time :func:`inject` context.
+
+Role classification is implemented independently of ``ece._classify_bits``
+(arithmetic range masks here vs. a per-bit role stack there); the
+differential property suite (``tests/test_fault_injection.py``) pins the two
+against each other for every pattern.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import threading
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit as P
+
+ROLES = ("sign", "regime_run", "regime_term", "exponent", "fraction", "any")
+OPERANDS = ("a", "b", "both")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, serializable description of one fault-injection experiment.
+
+    ``rate`` is the per-word probability that ONE bit of ``role`` is flipped
+    (uniform over that word's bits of the role; words with no bit of the
+    role — e.g. no terminator in a saturated regime — are never flipped, so
+    the *conditional* flip model matches the ECE per-role decomposition).
+    ``start_step``/``end_step`` bound the decode-step window ``[start, end)``
+    in which the plan is live; ``path``/``op`` are fnmatch patterns against
+    the numerics layer path and op kind; ``operand`` picks which side of the
+    op is corrupted ("a" = activations: slot-local blast; "b" = weights:
+    shared across every co-scheduled slot).
+    """
+
+    seed: int = 0
+    rate: float = 1e-3
+    role: str = "any"
+    path: str = "*"
+    op: str = "*"
+    operand: str = "a"
+    start_step: int = 0
+    end_step: int | None = None
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(f"unknown bit role {self.role!r}; one of {ROLES}")
+        if self.operand not in OPERANDS:
+            raise ValueError(
+                f"unknown operand {self.operand!r}; one of {OPERANDS}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+
+    def matches(self, path: str, op: str) -> bool:
+        import fnmatch
+        return (fnmatch.fnmatchcase(path, self.path)
+                and fnmatch.fnmatchcase(op, self.op))
+
+    # -- serde ------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultPlan":
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "FaultPlan":
+        return cls.from_dict(json.loads(s))
+
+
+# --------------------------------------------------------------------------
+# Trace-time activation: (plan, key, step) for the current computation
+# --------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_TLS, "stack"):
+        _TLS.stack = []
+    return _TLS.stack
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan, key, step):
+    """Activate ``plan`` for the trace-time extent.  ``key`` is a PRNG key
+    and ``step`` an int32 scalar — both may be tracers (the serving engine
+    threads them through its decode-scan carry)."""
+    _stack().append((plan, key, step))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def current() -> tuple | None:
+    """The active (plan, key, step) triple, or None outside any inject()."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+# --------------------------------------------------------------------------
+# Bit-role masks (independent re-derivation of ece._classify_bits)
+# --------------------------------------------------------------------------
+
+def role_mask(pats, cfg: P.PositConfig, role: str):
+    """uint32 mask of the word-bit positions holding ``role`` per pattern.
+
+    Bit positions are the *stored word's* (flips apply to the raw word, two's
+    complement and all — same convention as the ECE enumeration); the role
+    layout is derived from the magnitude-domain body, exactly as decode sees
+    it.  ``role="any"`` returns the full N-bit word mask.
+    """
+    N = cfg.n_bits
+    p = jnp.asarray(pats).astype(jnp.uint32) & P._mask(N)
+    if role == "any":
+        return jnp.full_like(p, P._mask(N))
+    if role == "sign":
+        return jnp.full_like(p, jnp.uint32(1 << (N - 1)))
+    sign = (p >> (N - 1)) & jnp.uint32(1)
+    body = jnp.where(sign == 1, (jnp.uint32(0) - p), p) & P._mask(N - 1)
+    u = (body << (32 - (N - 1))).astype(jnp.uint32)
+    r0 = (body >> (N - 2)) & jnp.uint32(1)
+    run = jnp.minimum(jax.lax.clz(jnp.where(r0 == 1, ~u, u)).astype(jnp.int32),
+                      N - 1)
+    sat = run >= cfg.rcap
+    rw = jnp.where(sat, cfg.rcap, jnp.minimum(run, cfg.rcap) + 1)
+
+    ones = jnp.uint32(P._mask(N - 1))
+
+    def prefix(length):
+        """Mask of the first ``length`` body bits (from the body MSB)."""
+        length = jnp.clip(length, 0, N - 1)
+        return ones & ~((jnp.uint32(1) << (N - 1 - length).astype(jnp.uint32))
+                        - 1)
+
+    run_mask = prefix(rw - jnp.where(sat, 0, 1))
+    if role == "regime_run":
+        return run_mask
+    if role == "regime_term":
+        return prefix(rw) & ~run_mask
+    exp_hi = prefix(jnp.minimum(rw + cfg.es, N - 1))
+    if role == "exponent":
+        return exp_hi & ~prefix(rw)
+    return ones & ~exp_hi  # fraction
+
+
+def _nth_set_bit(mask, r):
+    """One-hot uint32 selecting the ``r``-th set bit of ``mask`` (LSB-first);
+    zero where ``r >= popcount(mask)``.  Static loop over word bits."""
+    out = jnp.zeros_like(mask)
+    cnt = jnp.zeros_like(mask, jnp.int32)
+    r = r.astype(jnp.int32)
+    for b in range(32):
+        bit = ((mask >> b) & jnp.uint32(1)).astype(jnp.int32)
+        hit = (bit == 1) & (cnt == r)
+        out = jnp.where(hit, jnp.uint32(1) << b, out)
+        cnt = cnt + bit
+    return out
+
+
+def flip_words(pats, cfg: P.PositConfig, plan: FaultPlan, key, active=True):
+    """Apply the plan's seeded single-bit flips to an array of posit words.
+
+    Each word is independently selected with probability ``plan.rate``; a
+    selected word gets exactly one bit of ``plan.role`` flipped, chosen
+    uniformly among that word's role bits.  Zero and NaR words are never
+    flipped — the ECE expectation (Eq. 4) conditions on *valid* patterns,
+    and a "regime" flip on an all-zero body is an artifact of the encoding,
+    not of the bit role (its depth, hence its damage, would be set by the
+    format's regime cap rather than by the stored value).  ``active`` (bool,
+    may be traced) gates the whole thing — the step-window check.  Returns
+    ``(flipped_pats, flip_mask)``.
+    """
+    pats = jnp.asarray(pats).astype(jnp.uint32)
+    mask = role_mask(pats, cfg, plan.role)
+    pop = jax.lax.population_count(mask).astype(jnp.int32)
+    f0 = P.decode_fields(pats, cfg)
+    k_sel, k_bit = jax.random.split(key)
+    sel = jax.random.bernoulli(k_sel, plan.rate, pats.shape)
+    sel = sel & (pop > 0) & jnp.asarray(active)
+    sel = sel & ~(f0["is_zero"] | f0["is_nar"])
+    r = jax.random.randint(k_bit, pats.shape, 0, 1 << 30) % jnp.maximum(pop, 1)
+    onehot = _nth_set_bit(mask, r)
+    flips = jnp.where(sel, onehot, jnp.uint32(0))
+    return pats ^ flips, sel & (flips != 0)
+
+
+def corrupt(x, cfg, plan: FaultPlan, key, step, salt: int = 0):
+    """Corrupt a float operand tensor through the posit codec.
+
+    Mirrors the engine's datapath: pre-scale (when the EulerConfig uses it),
+    encode to posit words, flip per plan, decode back.  Untouched words keep
+    their exact original float value (the base backend quantizes them
+    identically either way), so the only perturbation is the injected flips.
+    ``step`` is the traced decode-step index checked against the plan window;
+    ``salt`` decorrelates the draws of different call sites within one step.
+    """
+    pc = cfg.posit
+    xf = jnp.asarray(x, jnp.float32)
+    if cfg.pre_scale:
+        from repro.core import engine as _E
+        s = _E._pow2_scale(xf)
+    else:
+        s = jnp.float32(1.0)
+    pat = P.encode_from_float(xf / s, pc)
+    active = step >= plan.start_step
+    if plan.end_step is not None:
+        active = active & (step < plan.end_step)
+    key = jax.random.fold_in(key, salt)
+    flipped, hit = flip_words(pat, pc, plan, key, active)
+    xq = P.decode_to_float(flipped, pc) * s
+    return jnp.where(hit, xq, xf).astype(x.dtype)
+
+
+def call_salt(path: str, op: str, operand: str) -> int:
+    """Stable per-call-site salt (decorrelates draws across ops in a step)."""
+    return zlib.crc32(f"{path}|{op}|{operand}".encode()) & 0x7FFFFFFF

@@ -1,5 +1,7 @@
 from .engine import (GenerationConfig, QueueFullError, Request,
                      RequestBatcher, ServeEngine)
+from .failover import DurableBatcher, ServeSupervisor, SimulatedCrash
 
 __all__ = ["ServeEngine", "GenerationConfig", "RequestBatcher", "Request",
-           "QueueFullError"]
+           "QueueFullError", "DurableBatcher", "ServeSupervisor",
+           "SimulatedCrash"]

@@ -41,6 +41,8 @@ import numpy as np
 
 from repro.models.layers import Ctx
 from repro.numerics import NumericsContext
+from repro.reliability.faults import FaultPlan
+from repro.reliability import faults as _faults
 
 log = logging.getLogger("repro.serving")
 
@@ -69,13 +71,22 @@ class ServeEngine:
     def __init__(self, model, params, ctx: Ctx | None = None, *,
                  max_len: int = 2048, batch: int = 8, cache_dtype=None,
                  decode_chunk: int = 8,
-                 numerics: NumericsContext | None = None):
+                 numerics: NumericsContext | None = None,
+                 fault: FaultPlan | None = None):
         """``numerics`` (policy + backend) overrides whatever the ctx
         carries — the serving-time precision/backend switch.  With no ctx at
         all, one is derived from the model's own numerics.
 
         ``decode_chunk``: how many decode steps ``generate`` scans on-device
-        between host-side all-done checks (the early-exit granularity)."""
+        between host-side all-done checks (the early-exit granularity).
+
+        ``fault``: optional live fault-injection plan.  Decode steps run
+        under ``reliability.faults.inject`` with a per-step key derived from
+        the plan's seed and a fault-step counter carried through the decode
+        scan — effective when the numerics backend is a ``faulty:<base>``
+        wrapper.  Prefill is never corrupted (faults target the decode
+        datapath where tokens are produced).  Reassigning ``self.fault``
+        between runs is safe: the jitted scans are cached per plan."""
         if ctx is None:
             ctx = (model.make_ctx() if hasattr(model, "make_ctx")
                    else Ctx(numerics=numerics))
@@ -102,6 +113,8 @@ class ServeEngine:
                     a, b.astype(a.dtype), s, axis=1), c, c1))
         self._scan_cache: dict[tuple, Any] = {}
         self.last_decode_steps = 0  # decode steps run by the last generate
+        self.fault = fault
+        self.fault_step = 0  # decode-step counter for step_slots fault keys
 
     # -- cache lifecycle ------------------------------------------------
 
@@ -118,34 +131,45 @@ class ServeEngine:
     def _decode_scan(self, gen: GenerationConfig, n: int):
         """n masked decode steps, scanned on-device.
 
-        Carry: (tok [B], pos [B], done [B], cache, key).  Finished rows emit
-        ``pad_id``, keep their position frozen and their sampled token
-        replaced — so a done row can never advance or influence its own
-        stream again.  Active rows clamp position writes to max_len-1
+        Carry: (tok [B], pos [B], done [B], cache, key, fstep).  Finished
+        rows emit ``pad_id``, keep their position frozen and their sampled
+        token replaced — so a done row can never advance or influence its
+        own stream again.  Active rows clamp position writes to max_len-1
         (dynamic_update_slice would clamp anyway; being explicit keeps the
-        cache write location well-defined)."""
-        cache_key = (gen.temperature, gen.top_k, gen.eos_id, gen.pad_id, n)
+        cache write location well-defined).  ``fstep`` is the global decode
+        step index driving the fault-injection window/keys; it advances even
+        with no fault plan so the carry structure is uniform."""
+        cache_key = (gen.temperature, gen.top_k, gen.eos_id, gen.pad_id, n,
+                     self.fault)
         if cache_key in self._scan_cache:
             return self._scan_cache[cache_key]
         pad = jnp.int32(gen.pad_id)
         eos = gen.eos_id
         maxpos = self.max_len - 1
-        model, ctx = self.model, self.ctx
+        model, ctx, fault = self.model, self.ctx, self.fault
 
-        def run(params, tok, pos, done, cache, key):
+        def run(params, tok, pos, done, cache, key, fstep):
             def body(carry, _):
-                tok, pos, done, cache, key = carry
+                tok, pos, done, cache, key, fstep = carry
                 key, sub = jax.random.split(key)
-                logits, cache = model.decode_step(params, tok, pos, cache, ctx)
+                if fault is not None:
+                    fkey = jax.random.fold_in(
+                        jax.random.PRNGKey(fault.seed), fstep)
+                    with _faults.inject(fault, fkey, fstep):
+                        logits, cache = model.decode_step(
+                            params, tok, pos, cache, ctx)
+                else:
+                    logits, cache = model.decode_step(params, tok, pos,
+                                                      cache, ctx)
                 nxt = _sample(logits, gen, sub)
                 nxt = jnp.where(done, pad, nxt)
                 pos = jnp.where(done, pos, jnp.minimum(pos + 1, maxpos))
                 if eos is not None:
                     done = done | (nxt == eos)
-                return (nxt, pos, done, cache, key), nxt
+                return (nxt, pos, done, cache, key, fstep + 1), nxt
 
-            carry, toks = jax.lax.scan(body, (tok, pos, done, cache, key),
-                                       None, length=n)
+            carry, toks = jax.lax.scan(
+                body, (tok, pos, done, cache, key, fstep), None, length=n)
             return carry, toks
 
         fn = jax.jit(run)
@@ -176,11 +200,12 @@ class ServeEngine:
         outs = [tok[:, None]]  # first token comes from the prefill logits
         remaining = gen.max_new_tokens - 1
         steps = 0
+        fstep = jnp.int32(0)
         while remaining > 0 and not bool(done.all()):
             n = min(self.decode_chunk, remaining)
             scan = self._decode_scan(gen, n)
-            (tok, pos, done, cache, key), toks = scan(
-                self.params, tok, pos, done, cache, key)
+            (tok, pos, done, cache, key, fstep), toks = scan(
+                self.params, tok, pos, done, cache, key, fstep)
             outs.append(toks.T)  # [B, n]
             remaining -= n
             steps += n
@@ -214,13 +239,16 @@ class ServeEngine:
         ``tok``/``pos``: [B] host arrays; ``active``: [B] bool.  Inactive
         slots are fed as done (emit pad, frozen position).  Returns the
         emitted [B] tokens (numpy) and the threaded PRNG key; the cache
-        advances on the engine."""
+        advances on the engine, as does ``fault_step`` (the scheduler-path
+        decode-step counter for fault-injection keys)."""
         scan = self._decode_scan(gen, 1)
-        (_, _, _, cache, key), toks = scan(
+        (_, _, _, cache, key, _), toks = scan(
             self.params, jnp.asarray(tok, jnp.int32),
             jnp.asarray(pos, jnp.int32),
-            jnp.asarray(~np.asarray(active, bool)), self.cache, key)
+            jnp.asarray(~np.asarray(active, bool)), self.cache, key,
+            jnp.int32(self.fault_step))
         self.cache = cache
+        self.fault_step += 1
         return np.asarray(toks[0]), key
 
 
@@ -242,6 +270,25 @@ class _Slot:
     """Host-side per-slot scheduler state (device holds tok/pos vectors)."""
     req: Request
     budget: int          # tokens still allowed (per-request max_new cap)
+
+
+@dataclasses.dataclass
+class _RunState:
+    """The scheduler loop's complete host-side state.
+
+    Everything ``run`` needs between two decode steps lives here (the device
+    holds the cache on the engine), which is what makes the loop resumable:
+    ``serving.failover.DurableBatcher`` serializes this plus the engine cache
+    at step boundaries and re-enters ``_drive`` from the restored state."""
+    gen: GenerationConfig     # step/sampling config for every decode step
+    cap_budget: bool          # True: gen.max_new_tokens caps request budgets
+    key: Any                  # threaded PRNG key
+    slots: list               # [B] of _Slot | None
+    tok: np.ndarray           # [B] last emitted token per slot
+    pos: np.ndarray           # [B] next cache write position per slot
+    active: np.ndarray        # [B] bool
+    step: int = 0             # decode steps taken in this run
+    results: dict = dataclasses.field(default_factory=dict)
 
 
 class RequestBatcher:
@@ -310,109 +357,137 @@ class RequestBatcher:
 
     def run(self, gen: GenerationConfig | None = None,
             on_complete: Callable[[int, np.ndarray], None] | None = None,
-            key=None):
+            key=None, max_steps: int | None = None):
         """Drain the queue; returns {rid: tokens}.
 
         ``gen`` supplies sampling/EOS config; per-request token budgets are
         ``min(request.max_new, gen.max_new_tokens)`` (request.max_new alone
         when ``gen`` is None).  ``on_complete(rid, tokens)`` streams each
-        request's result the step it finishes."""
+        request's result the step it finishes.
+
+        ``max_steps`` bounds the decode steps of THIS call; the loop then
+        returns the results so far with the full scheduler state retained on
+        ``self._state`` — the cooperative-yield / simulated-kill hook used
+        by the failover tests and ``serving.failover``."""
+        if not self.queue:
+            return {}
+        st = self._begin(gen, key)
+        return self._drive(st, on_complete=on_complete, max_steps=max_steps)
+
+    def _begin(self, gen: GenerationConfig | None, key) -> _RunState:
+        """Reset per-drain state (events/stats/cache) and build a fresh
+        :class:`_RunState`.  Events/stats describe ONE drain (that is what
+        the drivers print), so step indices stay unambiguous across runs."""
         eng = self.engine
         B = eng.batch
-        results: dict[int, np.ndarray] = {}
-        if not self.queue:
-            return results
-        step_gen = gen if gen is not None else GenerationConfig()
-        key = key if key is not None else jax.random.PRNGKey(0)
-        # events/stats describe ONE drain (that is what the drivers print);
-        # they reset here so step indices stay unambiguous across runs
         self.events = []
         self.stats = {"steps": 0, "refills": 0, "truncated": 0}
-
         eng.reset_all()
-        slots: list[_Slot | None] = [None] * B
-        tok = np.zeros(B, np.int32)
-        pos = np.zeros(B, np.int64)
-        active = np.zeros(B, bool)
-        step = 0
+        eng.fault_step = 0
+        st = _RunState(
+            gen=gen if gen is not None else GenerationConfig(),
+            cap_budget=gen is not None,
+            key=key if key is not None else jax.random.PRNGKey(0),
+            slots=[None] * B, tok=np.zeros(B, np.int32),
+            pos=np.zeros(B, np.int64), active=np.zeros(B, bool))
+        self._state = st
+        return st
+
+    def _budget(self, st: _RunState, r: Request) -> int:
+        return (min(r.max_new, st.gen.max_new_tokens) if st.cap_budget
+                else r.max_new)
+
+    def _retire(self, st: _RunState, s: int, on_complete):
+        slot = st.slots[s]
+        r = slot.req
+        r.done = True
+        st.results[r.rid] = np.asarray(r.out, np.int32)
+        self.events.append(("done", r.rid, s, st.step))
+        if on_complete is not None:
+            on_complete(r.rid, st.results[r.rid])
+        st.slots[s] = None
+        st.active[s] = False
+
+    def _admit(self, st: _RunState, s: int, on_complete) -> bool:
+        """Pull the next request into slot ``s``; returns True if the
+        slot ended up active (a request can finish at its very first
+        token — then the slot is retired and the next one is tried)."""
+        eng = self.engine
+        while self.queue:
+            r = self.queue.pop(0)
+            if self._budget(st, r) <= 0:  # zero-token request: complete empty
+                r.done = True
+                st.results[r.rid] = np.zeros(0, np.int32)
+                self.events.append(("done", r.rid, s, st.step))
+                if on_complete is not None:
+                    on_complete(r.rid, st.results[r.rid])
+                continue
+            packed = self._pack(r)
+            # last cache write lands at bucket + budget - 2 (the final
+            # emitted token is never fed back), so clamping only kicks
+            # in beyond max_len + 1
+            if len(packed) + self._budget(st, r) > eng.max_len + 1:
+                log.warning(
+                    "rid=%d bucket %d + max_new %d exceeds max_len %d; "
+                    "late cache writes clamp to the last position",
+                    r.rid, len(packed), self._budget(st, r), eng.max_len)
+            st.key, sub = jax.random.split(st.key)
+            first = eng.prefill_slot(s, packed, st.gen, sub)
+            kind = "refill" if st.step > 0 else "admit"
+            self.events.append((kind, r.rid, s, st.step))
+            if kind == "refill":
+                self.stats["refills"] += 1
+            st.slots[s] = _Slot(req=r, budget=self._budget(st, r))
+            r.out.append(first)
+            st.slots[s].budget -= 1
+            st.tok[s] = first
+            st.pos[s] = len(packed)
+            st.active[s] = True
+            hit_eos = (st.gen.eos_id is not None
+                       and first == st.gen.eos_id)
+            if st.slots[s].budget <= 0 or hit_eos:
+                self._retire(st, s, on_complete)  # done on the prefill token
+                continue
+            return True
+        return False
+
+    def _drive(self, st: _RunState, on_complete=None,
+               max_steps: int | None = None):
+        """Advance the scheduler loop from ``st`` until the queue drains (or
+        ``max_steps`` decode steps).  ``_on_step_boundary`` fires after each
+        completed step — the consistent point where subclasses snapshot."""
+        eng = self.engine
+        B = eng.batch
         maxpos = eng.max_len - 1
-
-        def _budget(r: Request) -> int:
-            return (min(r.max_new, gen.max_new_tokens) if gen is not None
-                    else r.max_new)
-
-        def _retire(s: int):
-            slot = slots[s]
-            r = slot.req
-            r.done = True
-            results[r.rid] = np.asarray(r.out, np.int32)
-            self.events.append(("done", r.rid, s, step))
-            if on_complete is not None:
-                on_complete(r.rid, results[r.rid])
-            slots[s] = None
-            active[s] = False
-
-        def _admit(s: int) -> bool:
-            """Pull the next request into slot ``s``; returns True if the
-            slot ended up active (a request can finish at its very first
-            token — then the slot is retired and the next one is tried)."""
-            nonlocal key
-            while self.queue:
-                r = self.queue.pop(0)
-                if _budget(r) <= 0:  # zero-token request: complete empty
-                    r.done = True
-                    results[r.rid] = np.zeros(0, np.int32)
-                    self.events.append(("done", r.rid, s, step))
-                    if on_complete is not None:
-                        on_complete(r.rid, results[r.rid])
-                    continue
-                packed = self._pack(r)
-                # last cache write lands at bucket + budget - 2 (the final
-                # emitted token is never fed back), so clamping only kicks
-                # in beyond max_len + 1
-                if len(packed) + _budget(r) > eng.max_len + 1:
-                    log.warning(
-                        "rid=%d bucket %d + max_new %d exceeds max_len %d; "
-                        "late cache writes clamp to the last position",
-                        r.rid, len(packed), _budget(r), eng.max_len)
-                key, sub = jax.random.split(key)
-                first = eng.prefill_slot(s, packed, step_gen, sub)
-                kind = "refill" if step > 0 else "admit"
-                self.events.append((kind, r.rid, s, step))
-                if kind == "refill":
-                    self.stats["refills"] += 1
-                slots[s] = _Slot(req=r, budget=_budget(r))
-                r.out.append(first)
-                slots[s].budget -= 1
-                tok[s] = first
-                pos[s] = len(packed)
-                active[s] = True
-                hit_eos = (step_gen.eos_id is not None
-                           and first == step_gen.eos_id)
-                if slots[s].budget <= 0 or hit_eos:
-                    _retire(s)   # degenerate: done on the prefill token
-                    continue
-                return True
-            return False
-
+        steps_this_call = 0
         while True:
             for s in range(B):
-                if slots[s] is None:
-                    _admit(s)
-            if not active.any():
+                if st.slots[s] is None:
+                    self._admit(st, s, on_complete)
+            if not st.active.any():
                 break
-            emitted, key = eng.step_slots(step_gen, tok, pos, active, key)
-            step += 1
+            if max_steps is not None and steps_this_call >= max_steps:
+                break  # yield with resumable state (simulated kill point)
+            emitted, st.key = eng.step_slots(st.gen, st.tok, st.pos,
+                                             st.active, st.key)
+            st.step += 1
+            steps_this_call += 1
             self.stats["steps"] += 1
             for s in range(B):
-                if slots[s] is None:
+                if st.slots[s] is None:
                     continue
                 t = int(emitted[s])
-                slots[s].req.out.append(t)
-                slots[s].budget -= 1
-                tok[s] = t
-                pos[s] = min(pos[s] + 1, maxpos)
-                hit_eos = step_gen.eos_id is not None and t == step_gen.eos_id
-                if slots[s].budget <= 0 or hit_eos:
-                    _retire(s)
-        return results
+                st.slots[s].req.out.append(t)
+                st.slots[s].budget -= 1
+                st.tok[s] = t
+                st.pos[s] = min(st.pos[s] + 1, maxpos)
+                hit_eos = (st.gen.eos_id is not None
+                           and t == st.gen.eos_id)
+                if st.slots[s].budget <= 0 or hit_eos:
+                    self._retire(st, s, on_complete)
+            self._on_step_boundary(st)
+        return st.results
+
+    def _on_step_boundary(self, st: _RunState):
+        """Hook: called after every completed decode step (post-retire).
+        ``DurableBatcher`` snapshots here; the base scheduler does nothing."""

@@ -104,6 +104,20 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_roundtrip_extension_dtypes(tmp_path):
+    """bfloat16 leaves survive the np.save round trip (np.save writes
+    extension dtypes as raw void bytes; restore must reinterpret them)."""
+    rng = np.random.default_rng(1)
+    t = {"kv": jnp.asarray(rng.normal(size=(4, 8)), jnp.bfloat16),
+         "w": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+    CK.save(str(tmp_path), 7, t)
+    restored, step, _ = CK.restore(str(tmp_path), t)
+    assert step == 7
+    assert restored["kv"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["kv"], np.float32),
+                                  np.asarray(t["kv"], np.float32))
+
+
 def test_checkpoint_keeps_latest_complete(tmp_path):
     t = _tree()
     CK.save(str(tmp_path), 1, t)

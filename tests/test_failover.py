@@ -1,4 +1,8 @@
-"""Failover policy: heartbeats, stragglers, elastic planning, replay."""
+"""Failover: heartbeats, stragglers, elastic planning, replay — and the
+serve-side checkpoint-restart loop (DurableBatcher / ServeSupervisor)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.distributed import failover as F
@@ -24,6 +28,45 @@ def test_dead_host_detection():
     mon.beat("h1", 6)
     assert mon.dead_hosts() == ["h2"]
     assert set(mon.alive()) == {"h0", "h1"}
+
+
+def test_ewma_survives_idle_heartbeats():
+    """Regression: liveness-only beats (same step) must not reset the step
+    timer — the eventual advance is measured from the last *advance*."""
+    clk = Clock()
+    mon = F.HeartbeatMonitor(["h0"], dead_after_s=1e9, clock=clk)
+    clk.t = 1.0
+    mon.beat("h0", 1)  # first advance seeds the EWMA: 1.0 s/step
+    assert mon.hosts["h0"].step_ewma == pytest.approx(1.0)
+    for _ in range(5):  # step stalls; host keeps heartbeating
+        clk.t += 0.2
+        mon.beat("h0", 1)
+    clk.t = 4.0
+    mon.beat("h0", 2)  # the stalled step took 3.0 s (t=1.0 -> t=4.0)
+    assert mon.hosts["h0"].step_ewma == pytest.approx(0.8 * 1.0 + 0.2 * 3.0)
+
+
+def test_ewma_multi_step_advance_averages():
+    clk = Clock()
+    mon = F.HeartbeatMonitor(["h0"], dead_after_s=1e9, clock=clk)
+    clk.t = 6.0
+    mon.beat("h0", 3)  # 3 steps in 6 s -> 2.0 s/step
+    assert mon.hosts["h0"].step_ewma == pytest.approx(2.0)
+
+
+def test_ewma_step_regression_resets_anchor():
+    clk = Clock()
+    mon = F.HeartbeatMonitor(["h0"], dead_after_s=1e9, clock=clk)
+    clk.t = 1.0
+    mon.beat("h0", 5)  # 5 steps in 1 s
+    ew = mon.hosts["h0"].step_ewma
+    assert ew == pytest.approx(0.2)
+    clk.t = 2.0
+    mon.beat("h0", 1)  # restarted host: re-anchor, keep history
+    assert mon.hosts["h0"].step_ewma == pytest.approx(ew)
+    clk.t = 3.0
+    mon.beat("h0", 2)  # 1 step in 1 s since the re-anchor
+    assert mon.hosts["h0"].step_ewma == pytest.approx(0.8 * ew + 0.2 * 1.0)
 
 
 def test_straggler_detection():
@@ -111,10 +154,169 @@ def test_replay_plan_matches_pipeline_determinism():
 
 def test_data_sharding_disjoint():
     from repro.data import SyntheticLM
-    import numpy as np
     data = SyntheticLM(vocab=128, seed=0)
     full = [data.batch(0, 8, 16, shard=i, num_shards=4)["inputs"]
             for i in range(4)]
     assert all(f.shape == (2, 16) for f in full)
     # different shards see different streams
     assert not np.array_equal(np.asarray(full[0]), np.asarray(full[1]))
+
+
+def test_death_to_replay_chain():
+    """The full training-failover story in one pass: a host dies, the policy
+    rules ELASTIC_DOWN, the survivor mesh is planned, and the replay plan
+    re-issues deterministic batches for the lost steps."""
+    from repro.data import SyntheticLM
+    clk = Clock()
+    hosts = [f"h{i}" for i in range(4)]
+    mon = F.HeartbeatMonitor(hosts, dead_after_s=5, clock=clk)
+    pol = F.FailoverPolicy(min_hosts=2)
+    det = F.StragglerDetector()
+    for step in range(1, 4):
+        clk.t += 1
+        for h in hosts:
+            mon.beat(h, step)
+    clk.t += 10  # h3 goes silent
+    for h in hosts[:-1]:
+        mon.beat(h, 4)
+    d = pol.decide(mon, det, step=4)
+    assert d.action == F.Action.ELASTIC_DOWN
+    assert d.drop_hosts == ("h3",)
+    # 4 chips/host, TP=4 fixed: losing one host drops a data replica
+    chips = 4 * (len(hosts) - len(d.drop_hosts))
+    assert F.plan_elastic_mesh(chips, 4) == (3, 4)
+    plan = F.replay_plan(ckpt_step=2, failed_step=4)
+    assert plan["resume_step"] == 2
+    assert plan["replay_steps"] == [3, 4]
+    # the seeded pipeline re-issues identical batches on the survivor mesh
+    data = SyntheticLM(vocab=128, seed=0)
+    for s in plan["replay_steps"]:
+        np.testing.assert_array_equal(
+            np.asarray(data.batch(s, 6, 16, shard=0, num_shards=3)["inputs"]),
+            np.asarray(data.batch(s, 6, 16, shard=0, num_shards=3)["inputs"]))
+
+
+# ---------------------------------------------------------------------------
+# Serve-side checkpoint-restart (DurableBatcher / ServeSupervisor)
+# ---------------------------------------------------------------------------
+
+from repro.core.engine import EulerConfig            # noqa: E402
+from repro.models.config import ModelConfig          # noqa: E402
+from repro.models.layers import Ctx                  # noqa: E402
+from repro.models.transformer import Model           # noqa: E402
+from repro.serving import (DurableBatcher, GenerationConfig,    # noqa: E402
+                           RequestBatcher, ServeEngine, ServeSupervisor,
+                           SimulatedCrash)
+
+CFG = ModelConfig(name="fosrv", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                  loss_chunk=32, q_chunk=32, kv_chunk=32)
+GEN = GenerationConfig(max_new_tokens=8, eos_id=7)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    m = Model(CFG, EulerConfig(mode="exact"), remat=False)
+    params = m.init(jax.random.PRNGKey(0))
+    return m, params, Ctx(ecfg=m.ecfg)
+
+
+def _engine(model_params):
+    m, params, ctx = model_params
+    return ServeEngine(m, params, ctx, max_len=64, batch=2,
+                       cache_dtype=jnp.float32)
+
+
+def _prompts(n=5, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab, int(rng.integers(3, 12)))
+            for _ in range(n)]
+
+
+def _baseline(model_params, prompts):
+    b = RequestBatcher(_engine(model_params), prompt_buckets=(32,))
+    for p in prompts:
+        b.submit(p, max_new=GEN.max_new_tokens)
+    return b.run(GEN, key=jax.random.PRNGKey(11))
+
+
+def test_kill_and_restore_tokens_identical(model_params, tmp_path):
+    """A drain killed mid-stream and resumed in a fresh process emits, for
+    every request, exactly the tokens of an uninterrupted run."""
+    prompts = _prompts()
+    base = _baseline(model_params, prompts)
+    b1 = DurableBatcher(_engine(model_params), prompt_buckets=(32,),
+                        ckpt_dir=str(tmp_path), snapshot_every=1)
+    for p in prompts:
+        b1.submit(p, max_new=GEN.max_new_tokens)
+    partial = b1.run(GEN, key=jax.random.PRNGKey(11), max_steps=3)  # kill -9
+    assert len(partial) < len(base)  # requests really were in flight
+    # "fresh process": new batcher over a new engine, state from disk only
+    b2 = DurableBatcher(_engine(model_params), prompt_buckets=(32,),
+                        ckpt_dir=str(tmp_path), snapshot_every=1)
+    res = b2.resume()
+    assert set(res) == set(base)
+    for rid in base:
+        np.testing.assert_array_equal(np.asarray(res[rid]),
+                                      np.asarray(base[rid]))
+
+
+def test_supervisor_restarts_after_crash(model_params, tmp_path):
+    """End-to-end: crash at step 3 silences the heartbeat, the policy rules
+    ELASTIC_DOWN, the supervisor restarts from the snapshot, and the final
+    tokens equal the uninterrupted baseline."""
+    clk = Clock()
+    clk.t = 100.0
+    crashes = {"n": 0}
+
+    def boom(step):
+        if step == 3 and crashes["n"] == 0:
+            crashes["n"] += 1
+            raise SimulatedCrash("kill -9")
+
+    def mk():
+        return DurableBatcher(_engine(model_params), prompt_buckets=(32,),
+                              ckpt_dir=str(tmp_path), snapshot_every=1,
+                              on_step=boom)
+
+    sup = ServeSupervisor(mk, dead_after_s=5.0, clock=clk)
+    prompts = _prompts()
+
+    def submit(b):
+        for p in prompts:
+            b.submit(p, max_new=GEN.max_new_tokens)
+
+    res = sup.run(submit, GEN, key=jax.random.PRNGKey(11))
+    assert crashes["n"] == 1
+    assert sup.restarts == 1
+    assert [d.action for d in sup.decisions] == [F.Action.ELASTIC_DOWN]
+    base = _baseline(model_params, prompts)
+    assert set(res) == set(base)
+    for rid in base:
+        np.testing.assert_array_equal(np.asarray(res[rid]),
+                                      np.asarray(base[rid]))
+
+
+def test_supervisor_gives_up_after_max_restarts(model_params, tmp_path):
+    clk = Clock()
+    clk.t = 100.0
+
+    def boom(step):
+        if step == 2:
+            raise SimulatedCrash("still broken")
+
+    def mk():
+        return DurableBatcher(_engine(model_params), prompt_buckets=(32,),
+                              ckpt_dir=str(tmp_path), snapshot_every=1,
+                              on_step=boom)
+
+    sup = ServeSupervisor(mk, dead_after_s=5.0, max_restarts=2, clock=clk)
+    prompts = _prompts(3)
+
+    def submit(b):
+        for p in prompts:
+            b.submit(p, max_new=GEN.max_new_tokens)
+
+    with pytest.raises(SimulatedCrash):
+        sup.run(submit, GEN, key=jax.random.PRNGKey(11))
+    assert sup.restarts == 2

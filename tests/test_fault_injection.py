@@ -1,0 +1,270 @@
+"""Fault injection: bit-role masks vs the ECE classifier (differential),
+flip-delta fidelity through the codec, bounded damage caps, and the
+``faulty:<base>`` numerics backend.
+
+The differential and cap tests run unconditionally on exhaustive/seeded
+samples; hypothesis (an OPTIONAL test dependency, see test_property.py)
+additionally fuzzes the same properties when present.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import posit as P
+from repro.core.engine import EulerConfig
+from repro.numerics import NumericsContext, PrecisionPolicy
+from repro.numerics import api as N
+from repro.numerics.backends import faulty, get_backend
+from repro.reliability import faults as F
+from repro.reliability.ece import _classify_bits, _log2_magnitude
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: fuzz variants skip, seeded ones run
+    HAVE_HYPOTHESIS = False
+
+ROLE_ID = {"sign": 0, "regime_run": 1, "regime_term": 2, "exponent": 3,
+           "fraction": 4}
+WIDE_CFGS = [P.POSIT16, P.BPOSIT16, P.POSIT32, P.BPOSIT32]
+
+
+def _mask_from_classifier(cfg, pats, role):
+    """Recover role_mask's answer from ece._classify_bits (bit b counted
+    from the MSB lives at word position n_bits-1-b)."""
+    roles, _ = _classify_bits(pats, cfg)
+    r = np.asarray(roles)
+    out = np.zeros(len(np.asarray(pats)), np.uint32)
+    for b in range(cfg.n_bits):
+        out |= (r[:, b] == ROLE_ID[role]).astype(np.uint32) << (cfg.n_bits - 1 - b)
+    return out
+
+
+def _assert_roles_match(cfg, pats):
+    union = np.zeros(len(np.asarray(pats)), np.uint32)
+    for role in ROLE_ID:
+        m = np.asarray(F.role_mask(pats, cfg, role))
+        np.testing.assert_array_equal(
+            m, _mask_from_classifier(cfg, pats, role), err_msg=role)
+        assert (union & m == 0).all()  # roles partition the word ...
+        union |= m
+    assert (union == P._mask(cfg.n_bits)).all()  # ... with no bit left over
+
+
+@pytest.mark.parametrize("cfg", [P.POSIT8, P.BPOSIT8], ids=["p8", "bp8"])
+def test_role_mask_matches_ece_classifier_exhaustive(cfg):
+    """The two independent role derivations agree on every 8-bit pattern."""
+    _assert_roles_match(cfg, jnp.arange(1 << cfg.n_bits, dtype=jnp.uint32))
+
+
+@pytest.mark.parametrize("cfg", WIDE_CFGS, ids=["p16", "bp16", "p32", "bp32"])
+def test_role_mask_matches_ece_classifier_sampled(cfg):
+    rng = np.random.default_rng(0)
+    pats = jnp.asarray(
+        rng.integers(0, 1 << cfg.n_bits, 4096, dtype=np.uint64), jnp.uint32)
+    _assert_roles_match(cfg, pats)
+
+
+def _flip_deltas(cfg, pats, role=None):
+    """(per-bit |dlog2| matrix, validity matrix[, role-membership])."""
+    f0 = P.decode_fields(pats, cfg)
+    valid0 = ~(f0["is_zero"] | f0["is_nar"])
+    lg0 = _log2_magnitude(f0, cfg.frac_window)
+    mask = (F.role_mask(pats, cfg, role) if role is not None else None)
+    ds, oks = [], []
+    for bit in range(cfg.n_bits):
+        f1 = P.decode_fields(pats ^ (jnp.uint32(1) << bit), cfg)
+        ok = np.asarray(valid0 & ~(f1["is_zero"] | f1["is_nar"]))
+        if mask is not None:
+            ok = ok & np.asarray((mask >> bit) & 1, bool)
+        ds.append(np.abs(np.asarray(lg0 - _log2_magnitude(f1, cfg.frac_window))))
+        oks.append(ok)
+    return np.stack(ds, -1), np.stack(oks, -1)
+
+
+@pytest.mark.parametrize("cfg", [P.POSIT8, P.BPOSIT8, P.POSIT16, P.BPOSIT16],
+                         ids=["p8", "bp8", "p16", "bp16"])
+def test_single_flip_delta_matches_float_codec(cfg):
+    """|dlog2| of one flip via decoded fields (the ECE model) == via the
+    float codec — the per-role delta model measures real float damage."""
+    rng = np.random.default_rng(1)
+    pats = jnp.asarray(
+        rng.integers(0, 1 << cfg.n_bits, 512, dtype=np.uint64), jnp.uint32)
+    bits = rng.integers(0, cfg.n_bits, 512)
+    flipped = pats ^ (jnp.uint32(1) << jnp.asarray(bits, jnp.uint32))
+    f0, f1 = P.decode_fields(pats, cfg), P.decode_fields(flipped, cfg)
+    ok = np.asarray(~(f0["is_zero"] | f0["is_nar"] | f1["is_zero"]
+                      | f1["is_nar"]))
+    d_fields = np.abs(np.asarray(_log2_magnitude(f0, cfg.frac_window)
+                                 - _log2_magnitude(f1, cfg.frac_window)))
+    x0 = np.abs(np.asarray(P.decode_to_float(pats, cfg), np.float64))
+    x1 = np.abs(np.asarray(P.decode_to_float(flipped, cfg), np.float64))
+    d_float = np.abs(np.log2(x0, where=x0 > 0) - np.log2(x1, where=x1 > 0))
+    assert ok.any()
+    np.testing.assert_allclose(d_fields[ok], d_float[ok], atol=1e-3)
+
+
+def _bound_jump(pc: P.PositConfig) -> float:
+    """Largest possible |dlog2| in a bounded format: the full scale span
+    (k in [-R, R-1] times 2^es, plus the exponent field) plus < 1 bit of
+    mantissa."""
+    return 2 * pc.regime_max * (1 << pc.es) + 1.0
+
+
+@pytest.mark.parametrize("cfg", [P.BPOSIT8, P.BPOSIT16], ids=["bp8", "bp16"])
+def test_bounded_regime_flip_damage_capped(cfg):
+    """Regime-run flips under a bounded config never exceed the bound's max
+    scale jump — exhaustive over every (pattern, run-bit) pair."""
+    pats = jnp.arange(1 << cfg.n_bits, dtype=jnp.uint32)
+    d, ok = _flip_deltas(cfg, pats, role="regime_run")
+    assert ok.any()
+    worst = float(d[ok].max())
+    assert 0 < worst <= _bound_jump(cfg)
+
+
+def test_unbounded_regime_flip_exceeds_bposit_cap():
+    """Standard posit16 has regime flips far beyond BPOSIT16's damage cap —
+    the asymmetry the whole reliability claim rests on."""
+    d, ok = _flip_deltas(P.POSIT16, jnp.arange(1 << 16, dtype=jnp.uint32),
+                         role="regime_run")
+    assert float(d[ok].max()) > _bound_jump(P.BPOSIT16)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from(WIDE_CFGS), st.integers(0, 2**32 - 1))
+    @settings(max_examples=150, deadline=None)
+    def test_role_mask_fuzz(cfg, raw):
+        _assert_roles_match(
+            cfg, jnp.asarray([raw & P._mask(cfg.n_bits)], jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# flip_words / corrupt mechanics
+# ---------------------------------------------------------------------------
+
+def test_flip_words_exactly_one_role_bit_per_hit():
+    cfg = P.BPOSIT16
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    x = x.at[:64].set(0.0)  # zero words must never be flipped
+    pats = P.encode_from_float(x, cfg)
+    plan = F.FaultPlan(seed=0, rate=1.0, role="regime_run")
+    flipped, hit = F.flip_words(pats, cfg, plan, jax.random.PRNGKey(3))
+    diff = np.asarray(pats ^ flipped)
+    hit = np.asarray(hit)
+    pop = np.array([bin(d).count("1") for d in diff])
+    assert (pop[hit] == 1).all()
+    assert (pop[~hit] == 0).all()
+    assert not hit[:64].any()  # zeros excluded (valid-pattern conditioning)
+    mask = np.asarray(F.role_mask(pats, cfg, "regime_run"))
+    assert (diff & ~mask == 0).all()  # flips land only on role bits
+
+
+def test_flip_words_inactive_window_is_identity():
+    cfg = P.POSIT16
+    pats = P.encode_from_float(
+        jax.random.normal(jax.random.PRNGKey(1), (512,)), cfg)
+    plan = F.FaultPlan(seed=0, rate=1.0, role="any")
+    flipped, hit = F.flip_words(pats, cfg, plan, jax.random.PRNGKey(3),
+                                active=False)
+    np.testing.assert_array_equal(np.asarray(flipped), np.asarray(pats))
+    assert not bool(hit.any())
+
+
+def test_corrupt_respects_step_window():
+    cfg = EulerConfig(mode="posit", width=16, bounded=True)
+    x = jax.random.normal(jax.random.PRNGKey(2), (256,))
+    plan = F.FaultPlan(seed=0, rate=1.0, role="any", start_step=3, end_step=5)
+    key = jax.random.PRNGKey(7)
+    outside = F.corrupt(x, cfg, plan, key, jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(outside), np.asarray(x))
+    inside = F.corrupt(x, cfg, plan, key, jnp.int32(4))
+    assert bool(jnp.any(inside != x))
+
+
+# ---------------------------------------------------------------------------
+# the faulty:<base> backend
+# ---------------------------------------------------------------------------
+
+ECFG = EulerConfig(mode="posit", width=16, bounded=True)
+
+
+def _nctx(ecfg=ECFG):
+    return NumericsContext(policy=PrecisionPolicy.uniform(ecfg),
+                           backend=faulty("lax_ref").name)
+
+
+def test_faulty_backend_no_context_and_rate0_identity():
+    a = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    b = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    nctx = _nctx()
+    base = N.matmul(a, b, NumericsContext(policy=nctx.policy,
+                                          backend="lax_ref"))
+    np.testing.assert_array_equal(np.asarray(N.matmul(a, b, nctx)),
+                                  np.asarray(base))
+    plan = F.FaultPlan(seed=0, rate=0.0)
+    with F.inject(plan, jax.random.PRNGKey(5), jnp.int32(0)):
+        np.testing.assert_array_equal(np.asarray(N.matmul(a, b, nctx)),
+                                      np.asarray(base))
+
+
+def test_faulty_backend_deterministic_and_effective():
+    a = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    b = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    nctx = _nctx()
+    plan = F.FaultPlan(seed=0, rate=1.0, role="regime_run")
+    with F.inject(plan, jax.random.PRNGKey(5), jnp.int32(0)):
+        y1 = N.matmul(a, b, nctx)
+    with F.inject(plan, jax.random.PRNGKey(5), jnp.int32(0)):
+        y2 = N.matmul(a, b, nctx)
+    clean = N.matmul(a, b, NumericsContext(policy=nctx.policy,
+                                           backend="lax_ref"))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert bool(jnp.any(y1 != clean))
+
+
+def test_faulty_backend_exact_mode_immune():
+    """Exact ops carry no encoded posit words, so there is nothing to flip."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    b = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    nctx = _nctx(EulerConfig(mode="exact"))
+    plan = F.FaultPlan(seed=0, rate=1.0)
+    clean = N.matmul(a, b, NumericsContext(policy=nctx.policy,
+                                           backend="lax_ref"))
+    with F.inject(plan, jax.random.PRNGKey(5), jnp.int32(0)):
+        np.testing.assert_array_equal(np.asarray(N.matmul(a, b, nctx)),
+                                      np.asarray(clean))
+
+
+def test_faulty_backend_path_op_filter():
+    a = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    b = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    nctx = _nctx()
+    clean = N.matmul(a, b, NumericsContext(policy=nctx.policy,
+                                           backend="lax_ref"))
+    plan = F.FaultPlan(seed=0, rate=1.0, op="qk")  # only qk ops are hit
+    with F.inject(plan, jax.random.PRNGKey(5), jnp.int32(0)):
+        np.testing.assert_array_equal(np.asarray(N.matmul(a, b, nctx)),
+                                      np.asarray(clean))
+    plan = F.FaultPlan(seed=0, rate=1.0, path="attn*")
+    with F.inject(plan, jax.random.PRNGKey(5), jnp.int32(0)):
+        with N.scope("mlp"):
+            np.testing.assert_array_equal(np.asarray(N.matmul(a, b, nctx)),
+                                          np.asarray(clean))
+        with N.scope("attn"):
+            assert bool(jnp.any(N.matmul(a, b, nctx) != clean))
+
+
+def test_faulty_backend_name_resolution():
+    assert get_backend("faulty:lax_ref").name == "faulty:lax_ref"
+    assert get_backend("faulty:lax_ref") is get_backend("faulty:lax_ref")
+
+
+def test_fault_plan_serde_roundtrip():
+    plan = F.FaultPlan(seed=3, rate=1e-3, role="regime_term", path="attn/*",
+                       op="qk", operand="both", start_step=2, end_step=9)
+    assert F.FaultPlan.from_json(plan.to_json()) == plan
+    with pytest.raises(ValueError):
+        F.FaultPlan(role="nope")
+    with pytest.raises(ValueError):
+        F.FaultPlan(rate=1.5)

@@ -1,0 +1,34 @@
+"""Campaign driver: deterministic output, metric sanity, edit distance."""
+import json
+
+from repro.reliability.campaign import edit_distance, run_campaign
+
+
+def test_edit_distance():
+    assert edit_distance([], []) == 0
+    assert edit_distance([1, 2, 3], [1, 2, 3]) == 0
+    assert edit_distance([1, 2, 3], [1, 9, 3]) == 1
+    assert edit_distance([1, 2, 3], [2, 3]) == 1       # deletion
+    assert edit_distance([1, 2, 3], [1, 2, 3, 4]) == 1  # insertion
+    assert edit_distance([1, 2], [3, 4, 5]) == 3
+    assert edit_distance([1, 2, 3], []) == 3
+
+
+def test_campaign_deterministic_and_sane():
+    """Same seed => byte-identical campaign JSON (what makes the committed
+    BENCH_reliability.json reproducible), and the metrics are self-consistent."""
+    kw = dict(widths=(16,), roles=("regime_run",), rate=2e-3, n_requests=3,
+              max_new=5, batch=2, seed=0)
+    c1 = run_campaign(**kw)
+    c2 = run_campaign(**kw)
+    assert json.dumps(c1, sort_keys=True) == json.dumps(c2, sort_keys=True)
+
+    assert set(c1["formats"]) == {"posit16", "bposit16"}
+    for fmt in c1["formats"].values():
+        m = fmt["roles"]["regime_run"]
+        assert m["requests"] == 3
+        assert 0 <= m["corrupted_requests"] <= m["requests"]
+        assert m["corrupted_requests"] == sum(
+            1 for d in m["edit_distance_per_request"].values() if d)
+    assert "16" in c1["summary"]["gamma_app"]
+    assert "bounded_below_unbounded" in c1["summary"]["ordering"]
