@@ -1,6 +1,6 @@
 """Serving benchmark: sustained tokens/sec and per-request completion
 latency (p50/p99) through the continuous-batching scheduler, across the
-``repro.numerics`` backends.
+``repro.numerics`` backends and posit widths.
 
 SPADE (arXiv:2601.17279) and Nakasato et al. (arXiv:2401.14117) both argue
 posit engines win or lose on *sustained-throughput* behavior, not
@@ -9,17 +9,30 @@ single-kernel numbers — this is the serving-loop counterpart of
 admission, masked decode and mid-stream refill.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
-  PYTHONPATH=src python benchmarks/serve_bench.py \\
-      --backends exact,lax_ref,pallas --requests 32 --batch 4 --max-new 32
+  PYTHONPATH=src python benchmarks/serve_bench.py --guard \\
+      --backends exact,lax_ref --widths 8,16,32 --out BENCH_serving.json
 
 Latency is measured from ``run()`` start to each request's completion
 callback (requests are all queued up front, so this is completion time
 under a full queue — the continuous-batching number, not a single-request
-cold start).
+cold start).  Every cell runs one UNTIMED warm-up drain first, so the
+numbers are steady-state serving throughput (jit compilation excluded);
+``--guard`` benches each cell and its ``guarded:<backend>`` twin with
+timed passes INTERLEAVED A/B (see :func:`bench_backend`) and reports the
+ABFT clean-path overhead as the median of per-pass A/B wall ratios — the
+paired estimator, robust to host clock drift between passes.  The paper-
+bar (<= 10%) applies to the posit datapath (``lax_ref``), whose per-op
+codec work amortizes the thin check contractions; the ``exact`` f32
+backend is the degenerate baseline — its base matmul is a single fused
+XLA op costing next to nothing, so ANY added check looms large relative
+to it.  ``--out`` writes the full grid as ``BENCH_serving.json``
+(committed snapshot; wall-clock fields vary by machine, the structure and
+token counts do not).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -32,41 +45,78 @@ from repro.models.transformer import Model
 from repro.serving import GenerationConfig, RequestBatcher, ServeEngine
 
 
-def bench_backend(backend: str, cfg: ModelConfig, *, batch: int,
-                  max_len: int, requests: int, max_new: int,
-                  buckets=(16, 32), seed: int = 0):
-    """Serve ``requests`` random prompts; returns a metrics dict."""
-    nctx = N.NumericsContext.from_ecfg(from_variant(16, "L-21b"),
+def _make_batcher(backend: str, cfg: ModelConfig, *, batch, max_len, width,
+                  variant, buckets, seed):
+    nctx = N.NumericsContext.from_ecfg(from_variant(width, variant),
                                        backend=backend)
     model = Model(cfg, remat=False, numerics=nctx)
     params = model.init(jax.random.PRNGKey(seed))
     eng = ServeEngine(model, params, max_len=max_len, batch=batch,
                       numerics=nctx)
-    batcher = RequestBatcher(eng, prompt_buckets=buckets)
+    return RequestBatcher(eng, prompt_buckets=buckets)
+
+
+def _drain(batcher, gen, cfg, *, requests, max_new, buckets, seed):
+    """Submit the canonical traffic mix and time one full queue drain."""
     rng = np.random.default_rng(seed)
     for _ in range(requests):
         plen = int(rng.integers(4, max(buckets) + 1))
         batcher.submit(rng.integers(0, cfg.vocab, plen), max_new=max_new)
-
     lat: dict[int, float] = {}
     t0 = time.perf_counter()
-    results = batcher.run(GenerationConfig(max_new_tokens=max_new),
-                          on_complete=lambda rid, toks:
+    results = batcher.run(gen, on_complete=lambda rid, toks:
                           lat.__setitem__(rid, time.perf_counter() - t0))
-    wall = time.perf_counter() - t0
-    toks = sum(len(v) for v in results.values())
-    ls = np.asarray(sorted(lat.values()))
-    return {
-        "backend": backend,
-        "requests": len(results),
-        "tokens": toks,
-        "wall_s": wall,
-        "tok_per_s": toks / wall,
-        "p50_ms": float(np.percentile(ls, 50)) * 1e3,
-        "p99_ms": float(np.percentile(ls, 99)) * 1e3,
-        "steps": batcher.stats["steps"],
-        "refills": batcher.stats["refills"],
-    }
+    return time.perf_counter() - t0, results, lat
+
+
+def bench_backend(backend: str, cfg: ModelConfig, *, batch: int,
+                  max_len: int, requests: int, max_new: int, width: int = 16,
+                  variant: str = "L-21b", buckets=(16, 32), seed: int = 0,
+                  repeats: int = 1, paired_with: str | None = None):
+    """Serve ``requests`` random prompts; returns a metrics dict.
+
+    Runs one UNTIMED drain with identical traffic to compile every
+    scan/prefill program, then ``repeats`` timed steady-state drains and
+    reports the median-throughput pass.  ``paired_with`` names a second
+    backend benched under the SAME traffic with timed passes interleaved
+    A/B/A/B — then a ``(main, paired)`` tuple is returned.  Interleaving is
+    how the guard-overhead column is measured: back-to-back cells drift by
+    tens of percent on a busy host (clock scaling, cache state), which
+    swamps a few-percent ABFT delta; alternating passes cancel the drift.
+    """
+    names = [backend] + ([paired_with] if paired_with else [])
+    kw = dict(batch=batch, max_len=max_len, width=width, variant=variant,
+              buckets=buckets, seed=seed)
+    dkw = dict(requests=requests, max_new=max_new, buckets=buckets, seed=seed)
+    gen = GenerationConfig(max_new_tokens=max_new)
+    batchers = [_make_batcher(n, cfg, **kw) for n in names]
+    for b in batchers:  # warm-up: compile scans/prefills off the clock
+        _drain(b, gen, cfg, **dkw)
+    passes: list[list] = [[] for _ in batchers]
+    for _ in range(max(1, repeats)):
+        for i, b in enumerate(batchers):  # interleaved A/B timed passes
+            passes[i].append(_drain(b, gen, cfg, **dkw))
+    outs = []
+    for name, b, ps in zip(names, batchers, passes):
+        walls = [p[0] for p in ps]  # original pass order, for A/B pairing
+        ps = sorted(ps, key=lambda p: p[0])
+        wall, results, lat = ps[len(ps) // 2]  # median-throughput pass
+        toks = sum(len(v) for v in results.values())
+        ls = np.asarray(sorted(lat.values()))
+        outs.append({
+            "backend": name,
+            "width": width,
+            "requests": len(results),
+            "tokens": toks,
+            "wall_s": round(wall, 4),
+            "pass_walls_s": [round(w_, 4) for w_ in walls],
+            "tok_per_s": round(toks / wall, 1),
+            "p50_ms": round(float(np.percentile(ls, 50)) * 1e3, 1),
+            "p99_ms": round(float(np.percentile(ls, 99)) * 1e3, 1),
+            "steps": b.stats["steps"],
+            "refills": b.stats["refills"],
+        })
+    return outs[0] if paired_with is None else (outs[0], outs[1])
 
 
 def main(argv=None):
@@ -74,35 +124,103 @@ def main(argv=None):
     ap.add_argument("--backends", default="exact,lax_ref",
                     help="comma list from: " + ",".join(N.available_backends())
                          + " (pallas runs in interpret mode off-TPU: slow)")
+    ap.add_argument("--widths", default="16",
+                    help="comma list of posit widths (precision column)")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="slots; decode matmuls have batch rows, so small "
+                         "batches understate how well per-op work (codec "
+                         "AND guard checks) amortizes")
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed drains per cell; the median-throughput "
+                         "pass is reported (smoke forces 1)")
+    ap.add_argument("--guard", action="store_true",
+                    help="re-run each cell through guarded:<backend> (lean "
+                         "serving profile) and report ABFT clean-path "
+                         "overhead vs the unguarded tok/s")
+    ap.add_argument("--out", default="",
+                    help="write the grid as JSON (BENCH_serving.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: exercises admission, masked "
                          "decode and mid-stream refill end-to-end")
     args = ap.parse_args(argv)
     if args.smoke:
         args.requests, args.batch, args.max_new = 6, 2, 8
+        args.repeats = 1
 
-    cfg = ModelConfig(name="serve-bench", family="dense", n_layers=2,
-                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
-                      vocab=128, loss_chunk=32, q_chunk=32, kv_chunk=32)
+    if args.smoke:
+        cfg = ModelConfig(name="serve-bench", family="dense", n_layers=2,
+                          d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                          vocab=128, loss_chunk=32, q_chunk=32, kv_chunk=32)
+    else:
+        # big enough that per-op work dominates dispatch overhead — the
+        # regime where the guard's thin check contractions amortize (<10%)
+        cfg = ModelConfig(name="serve-bench", family="dense", n_layers=2,
+                          d_model=192, n_heads=4, n_kv_heads=2, d_ff=384,
+                          vocab=256, loss_chunk=32, q_chunk=32, kv_chunk=32)
+    widths = [int(w) for w in args.widths.split(",") if w]
+    if args.guard:
+        # the serving guard profile: event-gated recording, no sentinel
+        # encode, and the fast raw-operand check (quant_eps-widened
+        # tolerance) — the clean path pays a row-sum and two thin
+        # contractions, no extra codec passes
+        from repro.numerics.backends import guarded
+        from repro.reliability.guards import GuardConfig
+        gcfg = GuardConfig(record="events", sentinels=False, max_retries=2,
+                           quantize_check=False)
     print(f"# serve_bench batch={args.batch} requests={args.requests} "
-          f"max_new={args.max_new} (euler16 L-21b)")
-    print("backend,requests,tokens,tok_per_s,p50_ms,p99_ms,steps,refills")
-    for backend in args.backends.split(","):
-        r = bench_backend(backend.strip(), cfg, batch=args.batch,
-                          max_len=args.max_len, requests=args.requests,
-                          max_new=args.max_new, seed=args.seed)
-        print(f"{r['backend']},{r['requests']},{r['tokens']},"
-              f"{r['tok_per_s']:.1f},{r['p50_ms']:.0f},{r['p99_ms']:.0f},"
-              f"{r['steps']},{r['refills']}")
-        if args.smoke:
-            assert r["requests"] == args.requests, r
-            assert r["tokens"] == args.requests * args.max_new, r
-            assert r["refills"] >= 1, "no mid-stream refill exercised"
+          f"max_new={args.max_new} (L-21b @ widths {widths})")
+    print("backend,width,requests,tokens,tok_per_s,p50_ms,p99_ms,steps,"
+          "refills,guard_overhead_pct")
+    rows = []
+    for backend in [b.strip() for b in args.backends.split(",")]:
+        for width in widths:
+            kw = dict(batch=args.batch, max_len=args.max_len,
+                      requests=args.requests, max_new=args.max_new,
+                      width=width, seed=args.seed, repeats=args.repeats)
+            over = ""
+            if args.guard:
+                gb = guarded(backend, gcfg)
+                r, g = bench_backend(backend, cfg, paired_with=gb.name, **kw)
+                r["guarded"] = {"tok_per_s": g["tok_per_s"],
+                                "p50_ms": g["p50_ms"], "p99_ms": g["p99_ms"],
+                                "tokens": g["tokens"],
+                                "pass_walls_s": g["pass_walls_s"]}
+                # median of per-pass A/B wall ratios: each pair ran seconds
+                # apart, so host clock drift cancels pair-wise (median of
+                # each arm separately can sample different drift epochs)
+                ratios = [gw / rw for rw, gw in
+                          zip(r["pass_walls_s"], g["pass_walls_s"])]
+                r["guard_overhead_pct"] = round(
+                    100.0 * (float(np.median(ratios)) - 1.0), 1)
+                over = f"{r['guard_overhead_pct']:.1f}"
+            else:
+                r = bench_backend(backend, cfg, **kw)
+            rows.append(r)
+            print(f"{r['backend']},{r['width']},{r['requests']},"
+                  f"{r['tokens']},{r['tok_per_s']:.1f},{r['p50_ms']:.0f},"
+                  f"{r['p99_ms']:.0f},{r['steps']},{r['refills']},{over}")
+            if args.smoke:
+                assert r["requests"] == args.requests, r
+                assert r["tokens"] == args.requests * args.max_new, r
+                assert r["refills"] >= 1, "no mid-stream refill exercised"
+                if args.guard:
+                    assert r["guarded"]["tokens"] == r["tokens"], r
+
+    if args.out:
+        out = {"config": {"backends": args.backends, "widths": widths,
+                          "requests": args.requests, "batch": args.batch,
+                          "max_new": args.max_new, "seed": args.seed,
+                          "repeats": args.repeats, "guard": args.guard,
+                          "model": cfg.name},
+               "rows": rows}
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
     if args.smoke:
         print("serve_bench smoke OK")
 

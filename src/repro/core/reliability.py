@@ -1,11 +1,15 @@
-"""Compatibility alias: the ECE analysis moved to ``repro.reliability.ece``
-when reliability grew into a package (fault injection + serving campaign).
-Import from ``repro.reliability`` in new code.
+"""Deprecated alias: the ECE analysis moved to ``repro.reliability.ece``
+when reliability grew into a package (fault injection, ABFT guards, serving
+campaign).  Import from ``repro.reliability`` in new code; attribute access
+through this shim emits a :class:`DeprecationWarning` and will be removed
+once nothing in-tree depends on it.
 
 Resolution is lazy (module ``__getattr__``): ``repro.core`` imports this shim
 while ``repro.reliability.ece`` itself imports ``repro.core`` — an eager
 re-export would deadlock whichever side is imported first.
 """
+import warnings
+
 _NAMES = ("ece", "ece_vs_regime_bound", "improvement_factor",
           "_classify_bits", "_log2_magnitude")
 
@@ -15,6 +19,9 @@ __all__ = ["ece", "ece_vs_regime_bound", "improvement_factor"]
 def __getattr__(name):
     if name in _NAMES:
         import importlib
+        warnings.warn(
+            f"repro.core.reliability.{name} is deprecated; import it from "
+            "repro.reliability instead", DeprecationWarning, stacklevel=2)
         # import_module (not ``from repro.reliability import ece``): the
         # package __init__ shadows the submodule attribute with the function
         return getattr(importlib.import_module("repro.reliability.ece"), name)

@@ -3,12 +3,19 @@ flips, proving the bounded-regime claim end-to-end.
 
   PYTHONPATH=src python -m repro.launch.faultcamp --smoke
   PYTHONPATH=src python -m repro.launch.faultcamp --out BENCH_reliability.json
+  PYTHONPATH=src python -m repro.launch.faultcamp --smoke --guard
 
 ``--smoke`` runs the CI grid — one width, two fault plans (regime_run and
 fraction roles) on the lax_ref backend — and *asserts* the paper orderings:
 bounded token corruption strictly below unbounded at equal flip rate, and
 regime-role corruption strictly above fraction-role.  The full grid adds
 width 32 and writes the deterministic ``BENCH_reliability.json``.
+
+``--guard`` reruns every cell through the ``guarded:faulty:<backend>``
+defense arm and prints guarded-vs-unguarded columns (ABFT detection rate,
+op/request recovery rates, residual token damage); with ``--smoke`` it
+additionally *asserts* detection >= 0.9 on regime-bit faults and zero
+false positives on the clean arm (the CI ``guard-smoke`` job).
 """
 from __future__ import annotations
 
@@ -17,6 +24,10 @@ import json
 import logging
 
 from repro.reliability.campaign import run_campaign
+
+
+def _fmt(x) -> str:
+    return "n/a" if x is None else f"{x:.2f}"
 
 
 def main(argv=None):
@@ -36,6 +47,10 @@ def main(argv=None):
     ap.add_argument("--operand", default="a",
                     help="a = activations (slot-local blast radius), "
                          "b = weights (shared across co-scheduled slots)")
+    ap.add_argument("--guard", action="store_true",
+                    help="add the guarded:faulty:<backend> defense arm "
+                         "(detection/recovery/residual columns; with "
+                         "--smoke, asserts the guard acceptance bars)")
     ap.add_argument("--out", default="",
                     help="write the campaign JSON here (sorted keys, no "
                          "timestamps: byte-identical across runs)")
@@ -48,7 +63,7 @@ def main(argv=None):
                         rate=args.rate, n_requests=requests,
                         max_new=args.max_new, batch=args.batch,
                         seed=args.seed, backend=args.backend,
-                        operand=args.operand)
+                        operand=args.operand, guard=args.guard)
 
     for label, fmt in camp["formats"].items():
         row = "  ".join(
@@ -56,6 +71,14 @@ def main(argv=None):
             f"corrupt={m['corrupted_requests']}/{m['requests']}"
             for role, m in fmt["roles"].items())
         print(f"{label:<9} (R={fmt['regime_bound']}): {row}")
+        if args.guard:
+            grow = "  ".join(
+                f"{role}: detect={_fmt(m['guarded']['detection_rate'])} "
+                f"recover={_fmt(m['guarded']['request_recovery_rate'])} "
+                f"residual_ter={m['guarded']['residual_token_error_rate']:.4f}"
+                for role, m in fmt["roles"].items())
+            print(f"{'guarded':<9} (fp={fmt['guard_clean']['false_positives']}"
+                  f"): {grow}")
     print("summary:", json.dumps(camp["summary"], sort_keys=True))
 
     if args.out:
@@ -75,6 +98,18 @@ def main(argv=None):
         print("fault-smoke orderings OK")
     elif not all(ordering.values()):
         raise SystemExit(f"ordering violated: {ordering}")
+
+    if args.guard:
+        g = camp["summary"]["guard"]
+        if args.smoke:
+            assert g["false_positives"] == 0, (
+                f"ABFT false positives on the clean arm: {g}")
+            assert (g["detection_rate_regime"] is not None
+                    and g["detection_rate_regime"] >= 0.9), (
+                f"regime-bit detection rate below 0.9: {g}")
+            print("guard-smoke detection/false-positive bars OK")
+        elif g["false_positives"]:
+            raise SystemExit(f"guard false positives: {g}")
 
 
 if __name__ == "__main__":

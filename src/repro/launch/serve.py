@@ -3,6 +3,18 @@ the EULER-ADAS continuous-batching scheduler.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \\
       --requests 12 --max-new 16 --euler L-21b --eos-id 7 --stream
+
+Fault-tolerant serving knobs:
+
+  --guard            run the datapath through the ``guarded:<backend>`` ABFT
+                     wrapper; unrecovered checksum violations re-enqueue the
+                     hit request at higher precision (--guard-retry bound)
+  --deadline-ms      per-request wall-clock SLO; expired requests retire
+                     with status "timeout" instead of holding their slot
+  --degrade-ladder   comma-separated posit widths BELOW the primary format
+                     (e.g. "16,8" under --width 32 gives P32->P16->P8);
+                     under queue pressure new requests are admitted further
+                     down the ladder (--slo-queue-hi requests per level)
 """
 from __future__ import annotations
 
@@ -14,12 +26,14 @@ import jax
 import numpy as np
 
 from repro import configs as C
+from repro.core.engine import from_variant
 from repro.distributed import checkpoint as CK
 from repro.launch.train import build_numerics
 from repro.models.layers import Ctx
 from repro.models.transformer import Model
+from repro.numerics import NumericsContext, PrecisionPolicy
 from repro.serving import (DurableBatcher, GenerationConfig, QueueFullError,
-                           RequestBatcher, ServeEngine)
+                           RequestBatcher, ServeEngine, SLOConfig)
 
 
 def main(argv=None):
@@ -53,12 +67,31 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true",
                     help="restore the drain from --snapshot-dir instead of "
                          "submitting fresh requests")
+    ap.add_argument("--guard", action="store_true",
+                    help="ABFT-guard the datapath (guarded:<backend>) and "
+                         "re-enqueue requests hit by unrecovered violations")
+    ap.add_argument("--guard-retry", type=int, default=2,
+                    help="max guard-triggered re-enqueues per request before "
+                         "it retires with status 'failed'")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request wall-clock deadline; 0 disables")
+    ap.add_argument("--degrade-ladder", default="",
+                    help="comma-separated posit widths below the primary "
+                         "format (e.g. '16,8'); enables SLO-aware admission "
+                         "degradation")
+    ap.add_argument("--slo-queue-hi", type=int, default=4,
+                    help="queued requests per one-level admission demotion")
+    ap.add_argument("--slo-p99-ms", type=float, default=0.0,
+                    help="step-latency p99 threshold adding one more "
+                         "demotion level; 0 disables")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.WARNING)
 
     mod = C.get_config(args.arch)
     cfg = mod.SMOKE if args.smoke else mod.FULL
+    if args.guard:
+        args.backend = f"guarded:{args.backend}"
     nctx = build_numerics(args)
     ecfg = nctx.policy.default
     model = Model(cfg, ecfg, remat=False, numerics=nctx)
@@ -74,16 +107,32 @@ def main(argv=None):
             print(f"no checkpoint loaded ({e}); serving random init")
 
     ctx = Ctx(ecfg=ecfg, numerics=nctx)
+    levels = None
+    if args.degrade_ladder:
+        if args.euler == "exact":
+            raise SystemExit("--degrade-ladder needs a posit format "
+                             "(--euler), not exact")
+        widths = [int(w) for w in args.degrade_ladder.split(",") if w]
+        if any(w >= ecfg.width for w in widths):
+            raise SystemExit(f"--degrade-ladder widths {widths} must sit "
+                             f"strictly below the primary width {ecfg.width}")
+        levels = [nctx] + [
+            NumericsContext(policy=PrecisionPolicy.uniform(
+                from_variant(w, args.euler)), backend=args.backend)
+            for w in widths]
     eng = ServeEngine(model, params, ctx, max_len=args.max_len,
-                      batch=args.batch)
+                      batch=args.batch, numerics=nctx, levels=levels)
+    slo = (SLOConfig(queue_hi=args.slo_queue_hi,
+                     p99_ms=args.slo_p99_ms or None)
+           if levels else None)
+    kw = dict(max_queue=args.max_queue or None, slo=slo,
+              guard_retry=args.guard_retry if args.guard else 0)
     if args.snapshot_dir:
         batcher = DurableBatcher(eng, prompt_buckets=(32, 128),
-                                 max_queue=args.max_queue or None,
                                  ckpt_dir=args.snapshot_dir,
-                                 snapshot_every=args.snapshot_every)
+                                 snapshot_every=args.snapshot_every, **kw)
     else:
-        batcher = RequestBatcher(eng, prompt_buckets=(32, 128),
-                                 max_queue=args.max_queue or None)
+        batcher = RequestBatcher(eng, prompt_buckets=(32, 128), **kw)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
 
@@ -102,7 +151,8 @@ def main(argv=None):
             plen = int(rng.integers(4, 24))
             try:
                 batcher.submit(rng.integers(0, cfg.vocab, plen),
-                               max_new=args.max_new)
+                               max_new=args.max_new,
+                               deadline_ms=args.deadline_ms or None)
             except QueueFullError:  # admission control: shed, keep serving
                 dropped += 1
         if dropped:
@@ -119,6 +169,15 @@ def main(argv=None):
           f"({toks / dt:.1f} tok/s) under {ecfg.variant}@posit{ecfg.width} "
           f"[{batcher.stats['steps']} steps, {batcher.stats['refills']} "
           f"mid-stream refills]")
+    s = batcher.stats
+    if s["timeouts"] or s["guard_retries"] or s["demotions"]:
+        print(f"  SLO: {s['timeouts']} timeouts, {s['demotions']} admission "
+              f"demotions, {s['guard_retries']} guard retries")
+    if args.guard:
+        from repro.numerics import api as napi
+        t = napi.guard_totals(reset=True)
+        print(f"  guard: {t['checks']} checks, {t['violations']} violations, "
+              f"{t['recovered']} recovered, {t['unrecovered']} unrecovered")
     for rid in sorted(results)[:4]:
         print(f"  req {rid}: {results[rid][:8]}...")
 

@@ -16,17 +16,22 @@ See README.md "The numerics API" for a tour.
 """
 from .policy import (OP_KINDS, PolicyRule, PrecisionPolicy, ecfg_from_dict,
                      ecfg_to_dict, load_policy)
-from .backends import (Backend, ExactBackend, LaxRefBackend, PallasBackend,
-                       available_backends, get_backend, register_backend)
+from .backends import (Backend, ExactBackend, FaultyBackend, GuardedBackend,
+                       LaxRefBackend, PallasBackend, available_backends,
+                       faulty, get_backend, guarded, register_backend)
 from .api import (DEFAULT, NumericsContext, current, current_path,
-                  dot_general, elementwise, matmul, pv, qk, resolve, scope,
-                  scoped, use)
+                  dot_general, drain_guard_events, elementwise, guard_stats,
+                  guard_totals, matmul, pv, qk, reset_guard_stats, resolve,
+                  scope, scoped, use)
 
 __all__ = [
     "OP_KINDS", "PolicyRule", "PrecisionPolicy", "ecfg_from_dict",
     "ecfg_to_dict", "load_policy",
-    "Backend", "ExactBackend", "LaxRefBackend", "PallasBackend",
-    "available_backends", "get_backend", "register_backend",
+    "Backend", "ExactBackend", "FaultyBackend", "GuardedBackend",
+    "LaxRefBackend", "PallasBackend", "available_backends", "faulty",
+    "get_backend", "guarded", "register_backend",
     "DEFAULT", "NumericsContext", "current", "current_path", "dot_general",
-    "elementwise", "matmul", "pv", "qk", "resolve", "scope", "scoped", "use",
+    "drain_guard_events", "elementwise", "guard_stats", "guard_totals",
+    "matmul", "pv", "qk", "reset_guard_stats", "resolve", "scope", "scoped",
+    "use",
 ]

@@ -167,6 +167,39 @@ def last_dispatch() -> tuple[str, str]:
 
 
 # --------------------------------------------------------------------------
+# Guard stats (the ``guarded:<base>`` backend's observable surface)
+# --------------------------------------------------------------------------
+
+def guard_stats(reset: bool = False) -> dict:
+    """Per-dispatch ABFT guard counters, keyed ``"<layer path>|<op>"``:
+    ``{checks, violations, retries, recovered, unrecovered, nar_words,
+    saturated_words, sentinel_words}`` — populated whenever a
+    ``guarded:<base>`` backend executes ops.  Flushes pending device
+    callbacks before reading; ``reset`` clears after the read."""
+    from repro.reliability import guards as _G
+    return _G.stats(reset=reset)
+
+
+def guard_totals(reset: bool = False) -> dict:
+    """:func:`guard_stats` aggregated over every dispatch site."""
+    from repro.reliability import guards as _G
+    return _G.totals(reset=reset)
+
+
+def drain_guard_events() -> list:
+    """Pop pending per-violation guard events (one dict per violated op call,
+    with leading-axis row flags for slot attribution).  The serving
+    scheduler polls this at step boundaries to retry affected requests."""
+    from repro.reliability import guards as _G
+    return _G.drain_events()
+
+
+def reset_guard_stats():
+    from repro.reliability import guards as _G
+    _G.reset()
+
+
+# --------------------------------------------------------------------------
 # The op set
 # --------------------------------------------------------------------------
 

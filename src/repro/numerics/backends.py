@@ -223,6 +223,68 @@ def faulty(base: "str | Backend") -> FaultyBackend:
     return _BACKENDS.setdefault(wrapped.name, wrapped)
 
 
+class GuardedBackend(Backend):
+    """ABFT guard wrapper: run the base op, verify it, escalate on violation.
+
+    Every contraction-shaped op (``dot_general``/``matmul``/``qk``/``pv``)
+    is routed through :func:`repro.reliability.guards.guard_call`: an online
+    checksum check against an exact contraction of the posit-quantized
+    operands (tolerance calibrated per :class:`EulerConfig`), NaR/regime-
+    saturation sentinels on the encoded output, and a ``lax.cond``-gated
+    recompute ladder (same precision → wider posit → exact) on violation.
+    Per-dispatch counters surface via ``numerics.api.guard_stats()``.
+
+    Composes around any base — ``"guarded:faulty:pallas"`` guards the fused
+    kernel path *under* fault injection, the campaign's recovery arm (the
+    guard's same-precision retry redraws the fault PRNG stream via
+    ``faults.retrying``, modelling transient upsets).  ``elementwise`` has no
+    checksum identity and passes through unguarded.
+    """
+
+    def __init__(self, base: "str | Backend", gcfg=None):
+        from repro.reliability import guards as _G
+        self.base = get_backend(base)
+        self.gcfg = gcfg if gcfg is not None else _G.DEFAULT
+        self.name = f"guarded:{self.base.name}"
+
+    def _guarded(self, kind, a, b, dimension_numbers, cfg):
+        from repro.reliability import guards as _G
+        return _G.guard_call(self.base, kind, a, b, dimension_numbers,
+                             cfg, self.gcfg)
+
+    def dot_general(self, a, b, dimension_numbers, cfg: EulerConfig):
+        return self._guarded("dot_general", a, b, dimension_numbers, cfg)
+
+    def matmul(self, a, b, cfg: EulerConfig):
+        dn = (((a.ndim - 1,), (0,)), ((), ()))
+        return self._guarded("matmul", a, b, dn, cfg)
+
+    def qk(self, q, k, cfg: EulerConfig):
+        nd = q.ndim
+        batch = tuple(range(nd - 2))
+        dn = (((nd - 1,), (nd - 1,)), (batch, batch))
+        return self._guarded("qk", q, k, dn, cfg)
+
+    def pv(self, p, v, cfg: EulerConfig):
+        nd = p.ndim
+        batch = tuple(range(nd - 2))
+        dn = (((nd - 1,), (nd - 2,)), (batch, batch))
+        return self._guarded("pv", p, v, dn, cfg)
+
+    def elementwise(self, a, b, cfg: EulerConfig):
+        return self.base.elementwise(a, b, cfg)
+
+
+def guarded(base: "str | Backend", gcfg=None) -> GuardedBackend:
+    """The ABFT guard wrapper around ``base``, registered (memoized) under
+    ``"guarded:<base>"``.  A non-default ``gcfg`` replaces the registered
+    instance (one guard policy per name)."""
+    wrapped = GuardedBackend(base, gcfg)
+    if gcfg is not None:
+        return register_backend(wrapped.name, wrapped)
+    return _BACKENDS.setdefault(wrapped.name, wrapped)
+
+
 _BACKENDS: dict[str, Backend] = {}
 
 
@@ -235,8 +297,10 @@ def register_backend(name: str, backend: Backend) -> Backend:
 def get_backend(name: str | Backend) -> Backend:
     """Look up a backend by name (instances pass through unchanged).
 
-    ``"faulty:<base>"`` names resolve (and self-register) on demand to the
-    fault-injection wrapper around ``<base>``."""
+    ``"faulty:<base>"`` / ``"guarded:<base>"`` names resolve (and
+    self-register) on demand to the fault-injection / ABFT-guard wrapper
+    around ``<base>`` — prefixes nest left-to-right, so
+    ``"guarded:faulty:pallas"`` guards a faulted pallas path."""
     if isinstance(name, Backend):
         return name
     try:
@@ -244,6 +308,8 @@ def get_backend(name: str | Backend) -> Backend:
     except KeyError:
         if name.startswith("faulty:"):
             return faulty(name.split(":", 1)[1])
+        if name.startswith("guarded:"):
+            return guarded(name.split(":", 1)[1])
         raise KeyError(f"unknown numerics backend {name!r}; "
                        f"available: {sorted(_BACKENDS)}") from None
 

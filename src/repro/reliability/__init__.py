@@ -6,16 +6,23 @@ serving-scale campaign.
   old ``repro.core.reliability``, which stays as an alias).
 * ``faults`` — :class:`FaultPlan` + the seeded flip machinery applied to live
   encoded posit words by the ``faulty:<base>`` numerics backend.
+* ``guards`` — the defense: online ABFT checksums + NaR/saturation
+  sentinels + the detect->escalate recompute ladder, applied by the
+  ``guarded:<base>`` numerics backend.
 * ``campaign`` — drives live continuous-batching traffic under fault plans
   and measures application-level corruption (import it explicitly: it pulls
   in models/serving, which this package root deliberately does not).
 """
-from .ece import (ece, ece_vs_regime_bound, improvement_factor)
+from .guards import (GuardConfig, check_eps, escalation_ladder,
+                     guard_call)
+from .ece import (ece, ece_vs_regime_bound, improvement_factor,
+                  word_flags)
 from .faults import (FaultPlan, ROLES, call_salt, corrupt, current,
-                     flip_words, inject, role_mask)
+                     flip_words, inject, retry_index, retrying, role_mask)
 
 __all__ = [
-    "ece", "ece_vs_regime_bound", "improvement_factor",
+    "ece", "ece_vs_regime_bound", "improvement_factor", "word_flags",
     "FaultPlan", "ROLES", "call_salt", "corrupt", "current", "flip_words",
-    "inject", "role_mask",
+    "inject", "retry_index", "retrying", "role_mask",
+    "GuardConfig", "check_eps", "escalation_ladder", "guard_call",
 ]

@@ -102,7 +102,8 @@ def run_campaign(*, widths=(16, 32), roles=("regime_run", "fraction"),
                  rate: float = 5e-4, n_requests: int = 8, max_new: int = 12,
                  batch: int = 2, seed: int = 0, backend: str = "lax_ref",
                  operand: str = "a", model_cfg: ModelConfig | None = None,
-                 eos_id: int | None = 7) -> dict:
+                 eos_id: int | None = 7, guard: bool = False,
+                 guard_cfg=None) -> dict:
     """Run the full (format x role) grid at equal flip rate.
 
     One model (exact weights, shared by every format — the precision is a
@@ -110,6 +111,15 @@ def run_campaign(*, widths=(16, 32), roles=("regime_run", "fraction"),
     and once per fault plan, per format.  ``operand="a"`` hits activations
     (slot-local blast radius); ``"b"`` hits weights (shared across every
     co-scheduled slot).
+
+    ``guard=True`` adds the defense arm: every (format, role) cell is rerun
+    through ``guarded:faulty:<backend>`` with recording plans, producing the
+    guarded-vs-unguarded columns — ABFT **detection rate** (violations over
+    ops where a flip actually landed, the plan's own ground truth),
+    **op/request recovery rates** (escalation recomputes that came back
+    clean / affected requests restored to clean-run token equality) and the
+    **residual token damage** that still got through.  A guarded *clean*
+    drain per format counts false positives (must be zero).
     """
     cfg = model_cfg if model_cfg is not None else TINY
     model = Model(cfg, EulerConfig(mode="exact"), remat=False)
@@ -118,6 +128,19 @@ def run_campaign(*, widths=(16, 32), roles=("regime_run", "fraction"),
     prompts = _traffic(n_requests, cfg.vocab, seed)
     gen = GenerationConfig(max_new_tokens=max_new, eos_id=eos_id)
     fb = faulty(backend)
+    if guard:
+        from repro.numerics.backends import guarded
+        from repro.reliability import faults as _faults
+        from repro.reliability import guards as _guards
+        # lean guard profile: event-gated recording (no per-op host
+        # callbacks on the clean path), no sentinel encode, and a 2-rung
+        # ladder (same-precision redraw, then the immune exact backend) —
+        # the detection/recovery metrics are identical to the full profile,
+        # at a fraction of the trace/compile cost
+        if guard_cfg is None:
+            guard_cfg = _guards.GuardConfig(record="events", sentinels=False,
+                                            max_retries=2)
+        gb = guarded(fb, guard_cfg)
 
     formats = {}
     for w in widths:
@@ -131,7 +154,7 @@ def run_campaign(*, widths=(16, 32), roles=("regime_run", "fraction"),
                    "rate": rate, "n_requests": n_requests,
                    "max_new": max_new, "batch": batch, "seed": seed,
                    "backend": backend, "operand": operand,
-                   "model": cfg.name, "eos_id": eos_id},
+                   "model": cfg.name, "eos_id": eos_id, "guard": guard},
         "formats": {},
     }
     for label, ecfg in formats.items():
@@ -142,11 +165,59 @@ def run_campaign(*, widths=(16, 32), roles=("regime_run", "fraction"),
         base, _ = _drain(eng, prompts, gen, seed)
         fmt = {"bounded": ecfg.bounded, "width": ecfg.width,
                "regime_bound": ecfg.posit.regime_max, "roles": {}}
+        if guard:
+            nctx_g = NumericsContext(policy=PrecisionPolicy.uniform(ecfg),
+                                     backend=gb.name)
+            eng_g = ServeEngine(model, params, ctx, max_len=64, batch=batch,
+                                cache_dtype=jnp.float32, numerics=nctx_g)
+            _guards.reset()
+            base_g, _ = _drain(eng_g, prompts, gen, seed)
+            t = _guards.totals(reset=True)
+            fmt["guard_clean"] = {
+                "checks": t["checks"],
+                "false_positives": t["violations"],
+                "tokens_equal_unguarded": bool(all(
+                    np.array_equal(base[rid], base_g[rid]) for rid in base)),
+            }
         for role in roles:
             eng.fault = FaultPlan(seed=seed + 1, rate=rate, role=role,
                                   operand=operand)
             res, slot_of = _drain(eng, prompts, gen, seed)
-            fmt["roles"][role] = _compare(base, res, slot_of)
+            cell = _compare(base, res, slot_of)
+            if guard:
+                eng_g.fault = FaultPlan(seed=seed + 1, rate=rate, role=role,
+                                        operand=operand, record=True)
+                _guards.reset()
+                _faults.injection_stats(reset=True)
+                res_g, slot_of_g = _drain(eng_g, prompts, gen, seed)
+                t = _guards.totals(reset=True)
+                inj = _faults.injection_stats(reset=True)
+                affected = [int(rid) for rid, d in
+                            cell["edit_distance_per_request"].items() if d]
+                restored = sum(1 for rid in affected
+                               if np.array_equal(base[rid], res_g[rid]))
+                residual = _compare(base, res_g, slot_of_g)
+                cell["guarded"] = {
+                    "injected_ops": inj["ops"],
+                    "injected_words": inj["words"],
+                    "violations": t["violations"],
+                    "detection_rate": round(
+                        t["violations"] / inj["ops"], 6) if inj["ops"] else None,
+                    "retries": t["retries"],
+                    "op_recovery_rate": round(
+                        t["recovered"] / t["violations"], 6)
+                        if t["violations"] else None,
+                    "unrecovered": t["unrecovered"],
+                    "affected_requests": len(affected),
+                    "restored_requests": restored,
+                    "request_recovery_rate": round(
+                        restored / len(affected), 6) if affected else None,
+                    "residual_token_error_rate":
+                        residual["token_error_rate"],
+                    "residual_corrupted_requests":
+                        residual["corrupted_requests"],
+                }
+            fmt["roles"][role] = cell
         out["formats"][label] = fmt
 
     # -- summary: the paper's orderings at application level ---------------
@@ -175,5 +246,27 @@ def run_campaign(*, widths=(16, 32), roles=("regime_run", "fraction"),
     if "regime_run" in roles and "fraction" in roles:
         summary["ordering"]["regime_worse_than_fraction"] = bool(
             role_ter("regime_run") > role_ter("fraction"))
+    if guard:
+        inj = viol = rec = aff = rest = fp = 0
+        inj_regime = viol_regime = 0
+        for fmt in out["formats"].values():
+            fp += fmt["guard_clean"]["false_positives"]
+            for role, cell in fmt["roles"].items():
+                g = cell["guarded"]
+                inj += g["injected_ops"]
+                viol += g["violations"]
+                rec += g["retries"] - g["unrecovered"]
+                aff += g["affected_requests"]
+                rest += g["restored_requests"]
+                if role == "regime_run":
+                    inj_regime += g["injected_ops"]
+                    viol_regime += g["violations"]
+        summary["guard"] = {
+            "false_positives": fp,
+            "detection_rate": round(viol / inj, 6) if inj else None,
+            "detection_rate_regime": round(
+                viol_regime / inj_regime, 6) if inj_regime else None,
+            "request_recovery_rate": round(rest / aff, 6) if aff else None,
+        }
     out["summary"] = summary
     return out

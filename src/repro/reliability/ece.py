@@ -30,6 +30,26 @@ def _log2_magnitude(fields, W):
     return fields["scale"].astype(jnp.float32) + jnp.log2(mant)
 
 
+def word_flags(pats, cfg: P.PositConfig) -> dict:
+    """Per-word health flags of encoded posit words — the sentinel
+    classification the online guards (``reliability.guards``) count per op:
+    ``is_nar`` / ``is_zero`` straight from the codec, ``saturated`` when the
+    regime run hits the format's cap (the dynamic-range alarm: B-Posit clamps
+    exactly there, and a standard posit at max regime has no fraction left).
+    Shares the regime-run derivation with :func:`_classify_bits`."""
+    N = cfg.n_bits
+    f = P.decode_fields(pats, cfg)
+    p = jnp.asarray(pats, jnp.uint32)
+    sign = (p >> (N - 1)) & 1
+    body = jnp.where(sign == 1, (jnp.uint32(0) - p), p) & P._mask(N - 1)
+    u = (body << (32 - (N - 1))).astype(jnp.uint32)
+    r0 = (body >> (N - 2)) & jnp.uint32(1)
+    run = jnp.minimum(jax.lax.clz(jnp.where(r0 == 1, ~u, u)).astype(jnp.int32),
+                      N - 1)
+    return {"is_nar": f["is_nar"], "is_zero": f["is_zero"],
+            "saturated": run >= cfg.rcap}
+
+
 def _classify_bits(pats, cfg: P.PositConfig):
     """Role of each bit position for each pattern: 0=sign 1=run 2=term 3=exp 4=frac."""
     N = cfg.n_bits

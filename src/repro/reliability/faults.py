@@ -61,6 +61,8 @@ class FaultPlan:
     operand: str = "a"
     start_step: int = 0
     end_step: int | None = None
+    record: bool = False  # count landed injections (host callback per op;
+    #                       campaign ground truth for guard detection rates)
 
     def __post_init__(self):
         if self.role not in ROLES:
@@ -70,6 +72,13 @@ class FaultPlan:
                 f"unknown operand {self.operand!r}; one of {OPERANDS}")
         if not 0.0 <= self.rate <= 1.0:
             raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+        if self.start_step < 0:
+            raise ValueError(
+                f"start_step must be >= 0, got {self.start_step}")
+        if self.end_step is not None and self.end_step <= self.start_step:
+            raise ValueError(
+                f"inverted step window [{self.start_step}, {self.end_step}): "
+                "end_step must be > start_step (or None for open-ended)")
 
     def matches(self, path: str, op: str) -> bool:
         import fnmatch
@@ -122,6 +131,59 @@ def current() -> tuple | None:
     """The active (plan, key, step) triple, or None outside any inject()."""
     stack = _stack()
     return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def retrying(index: int):
+    """Mark the trace-time extent as recompute attempt ``index`` (>= 1).
+
+    The ABFT guard's escalation ladder (``reliability.guards``) wraps each
+    recompute in this: :func:`corrupt` folds the index into its PRNG key, so
+    a retried op draws a *fresh* fault pattern instead of replaying the
+    deterministic per-call-site stream — the transient-upset model, where a
+    recompute of the same op almost surely runs clean."""
+    if index < 1:
+        raise ValueError(f"retry index must be >= 1, got {index}")
+    prev = getattr(_TLS, "retry", 0)
+    _TLS.retry = index
+    try:
+        yield
+    finally:
+        _TLS.retry = prev
+
+
+def retry_index() -> int:
+    """Current recompute attempt (0 = first execution); trace-time static."""
+    return getattr(_TLS, "retry", 0)
+
+
+# --------------------------------------------------------------------------
+# Injection ground truth (``FaultPlan.record=True``)
+# --------------------------------------------------------------------------
+
+_INJ_LOCK = threading.Lock()
+_INJ = {"ops": 0, "words": 0}
+
+
+def _count_injection(nwords):
+    n = int(nwords)
+    with _INJ_LOCK:
+        if n > 0:
+            _INJ["ops"] += 1
+            _INJ["words"] += n
+
+
+def injection_stats(reset: bool = False) -> dict:
+    """{ops, words} actually corrupted by recording plans — ops where at
+    least one flip landed on the PRIMARY execution (guard-ladder recomputes
+    are excluded, so this is the denominator of a detection rate).  Flushes
+    pending device callbacks before reading."""
+    jax.effects_barrier()
+    with _INJ_LOCK:
+        out = dict(_INJ)
+        if reset:
+            _INJ.update(ops=0, words=0)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -233,7 +295,12 @@ def corrupt(x, cfg, plan: FaultPlan, key, step, salt: int = 0):
     if plan.end_step is not None:
         active = active & (step < plan.end_step)
     key = jax.random.fold_in(key, salt)
+    r = retry_index()
+    if r:  # guard recompute: fresh draw (transient faults don't replay)
+        key = jax.random.fold_in(key, r)
     flipped, hit = flip_words(pat, pc, plan, key, active)
+    if plan.record and retry_index() == 0:
+        jax.debug.callback(_count_injection, jnp.sum(hit))
     xq = P.decode_to_float(flipped, pc) * s
     return jnp.where(hit, xq, xf).astype(x.dtype)
 

@@ -1,0 +1,445 @@
+"""Online ABFT guards for the posit datapath: detect, escalate, recover.
+
+PR 6 built the offense (seeded bit flips on encoded posit words via the
+``faulty:<base>`` backend); this module is the defense.  A ``guarded:<base>``
+numerics backend (``repro.numerics.backends``) runs every contraction-shaped
+op (``dot_general``/``matmul``/``qk``/``pv``) through three layers:
+
+* **ABFT checksum** — the classic algorithm-based fault-tolerance identity
+  ``rowsum(A.B) == A.(rowsum(B))``: the guard sums the op's output over the
+  rhs-free dims and compares against the check contraction ``A . bsum``
+  computed *independently* in exact f32 over the posit-quantized operands
+  (the software stand-in for the hardware checksum lane that a checksum row
+  appended to the contraction would occupy).  The comparison tolerance is
+  calibrated per :class:`~repro.core.engine.EulerConfig` (:func:`check_eps`):
+  on the quantized operands, "posit"/"quant_only" modes only differ from the
+  check by f32 accumulation order, while "euler" mode differs by the ILM
+  multiplier's bounded relative error — so the tolerance scales with
+  ``sum_k |a_ik| * sum_j |b_kj|`` (a second cheap contraction) and a flip of
+  a regime/exponent bit, whose value blast dwarfs the multiplier error,
+  trips the check.  A non-finite row sum (NaR in the datapath) always trips.
+
+* **NaR / saturation sentinels** — the op's raw output is encoded back to
+  posit words and NaR plus regime-saturated words are counted per call
+  (:func:`sentinel_counts`, classification shared with ``ece.word_flags``).
+
+* **detect -> escalate ladder** — on a checksum violation the op is
+  recomputed through the *same* base backend along a bounded ladder
+  (:func:`escalation_ladder`): first at the same precision (a transient
+  fault, e.g. a seeded ``FaultPlan`` flip, draws a fresh PRNG stream via
+  ``faults.retrying`` and almost surely vanishes — restoring the clean-run
+  value *bit-identically*), then at the next-higher posit width(s), then on
+  the exact backend (immune to posit-word corruption by construction).
+  Every level re-checks at its own tolerance; retries stop at the first
+  clean recompute or after ``GuardConfig.max_retries`` attempts.
+
+Everything is jit-safe: checks and recomputes are traced ops (the ladder is
+``lax.cond``-gated so the clean path never pays for a recompute), and stats
+escape the trace through ``jax.debug.callback`` into a process-wide
+accumulator keyed by the dispatching (layer path, op kind) — read it with
+:func:`stats` / :func:`totals`, stream per-violation events to a scheduler
+with :func:`drain_events`, and snapshot/restore it across process restarts
+with :func:`snapshot` / :func:`load` (``serving.failover`` does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as _E
+from repro.core import posit as _P
+from repro.core.engine import EulerConfig
+
+RECORD_MODES = ("events", "full", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Static guard policy (hashable: closes over jitted functions).
+
+    ``margin`` multiplies the calibrated per-config epsilon (:func:`check_eps`)
+    — headroom between the multiplier-error ceiling and the smallest fault we
+    care to flag.  ``max_retries`` bounds the escalation ladder length (0 =
+    detect-only: violations are counted and surfaced but never recomputed —
+    the scheduler-level retry path).  ``retry_same`` puts a same-precision
+    recompute at the front of the ladder (recovers transient faults to the
+    clean-run value bit-identically).  ``record`` selects stats plumbing:
+    "events" (default) only pays a host callback when a violation fires,
+    "full" records every check (exact check/sentinel accounting — tests and
+    campaigns), "off" disables recording entirely.
+
+    ``quantize_check`` picks the check-operand profile.  True (default,
+    *precise*): the check contraction runs over the posit-quantized operands
+    — exactly what the datapath consumes — so the tolerance sits at the
+    multiplier-error floor and even sub-ULP faults trip it; the cost is one
+    extra codec pass per operand per op (~2x a codec-bound backend's clean
+    path).  False (*fast*, the serving profile): the check runs over the raw
+    f32 operands and the tolerance additionally absorbs the format's
+    operand-quantization error (:func:`quant_eps`) — regime/exponent flips
+    blast values by >= 2x and still trip it, while the clean path pays only
+    a row-sum and two thin contractions.
+    """
+
+    margin: float = 8.0
+    atol: float = 1e-6
+    max_retries: int = 3
+    retry_same: bool = True
+    sentinels: bool = True
+    record: str = "events"
+    quantize_check: bool = True
+
+    def __post_init__(self):
+        if self.record not in RECORD_MODES:
+            raise ValueError(
+                f"unknown record mode {self.record!r}; one of {RECORD_MODES}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.margin <= 0:
+            raise ValueError(f"margin must be > 0, got {self.margin}")
+
+
+DEFAULT = GuardConfig()
+
+_POSIT_MODES = ("posit", "euler", "quant_only")
+
+
+# --------------------------------------------------------------------------
+# Tolerance calibration
+# --------------------------------------------------------------------------
+
+def check_eps(cfg: EulerConfig) -> float:
+    """Calibrated relative ABFT tolerance floor for one config.
+
+    The check contraction runs in exact f32 over the posit-quantized
+    operands, so the clean-path residual is the *multiplier* error, not the
+    format error: f32 accumulation order for "exact"/"posit"/"quant_only"
+    (measured < 2e-8 up to K=512), the n-stage/m-truncated ILM error for
+    "euler" (measured ~2^-(3n+3.5) + 2^-(m+4.3) across the paper's variants
+    and widths), the fixed-point log approximation for "logfxp", plus the
+    output re-quantization step when ``out_quant`` is on.  Each term carries
+    ~2-4x headroom; :class:`GuardConfig.margin` multiplies on top.
+    """
+    if cfg.mode in ("exact", "posit", "quant_only"):
+        eps = 1e-6
+    elif cfg.mode == "logfxp":
+        eps = 2.0 ** -(2 * cfg.stages + 2)
+    elif cfg.mode == "euler":
+        eps = 2.0 ** -(3 * cfg.stages + 2)
+        if cfg.trunc is not None:
+            eps += 2.0 ** -(cfg.trunc + 3)
+    else:
+        eps = 1e-4
+    if cfg.out_quant and cfg.mode != "exact":
+        eps += 2.0 ** -(cfg.posit.frac_window - 3)
+    return eps
+
+
+def quant_eps(cfg: EulerConfig) -> float:
+    """Relative operand-quantization error bound for the raw-operand check
+    profile (``GuardConfig.quantize_check=False``): the worst-case posit
+    rounding step inside the pre-scaled operating range, half an ULP of the
+    fixed fraction window with 2x headroom.  Zero for modes that consume
+    raw f32 operands."""
+    if cfg.mode not in _POSIT_MODES:
+        return 0.0
+    return 2.0 ** -(cfg.posit.frac_window - 2)
+
+
+def _quantize_like(x, cfg: EulerConfig):
+    """The operand value the base datapath actually consumes: pre-scaled
+    posit quantization for posit-word modes, plain f32 otherwise."""
+    xf = jnp.asarray(x, jnp.float32)
+    if cfg.mode not in _POSIT_MODES:
+        return xf
+    s = _E._pow2_scale(xf) if cfg.pre_scale else jnp.float32(1.0)
+    return _P.quantize(xf / s, cfg.posit) * s
+
+
+def _rhs_free(b_ndim: int, dimension_numbers):
+    (lc, rc), (lb, rb) = dimension_numbers
+    return tuple(d for d in range(b_ndim) if d not in rc and d not in rb)
+
+
+def abft_residual(out, aq, bq, dimension_numbers):
+    """(delta, budget): |rowsum(out) - aq.rowsum(bq)| and sum_k |a||b|.
+
+    Both shaped like the output's batch + lhs-free dims.  ``delta`` is the
+    ABFT residual; ``budget`` the scale the tolerance multiplies (the exact
+    absolute-value contraction — an upper bound on every accumulated
+    product's magnitude)."""
+    rfree = _rhs_free(bq.ndim, dimension_numbers)
+    bsum = jnp.sum(bq, axis=rfree, keepdims=True) if rfree else bq
+    babs = jnp.sum(jnp.abs(bq), axis=rfree, keepdims=True) if rfree else jnp.abs(bq)
+    dot = functools.partial(jax.lax.dot_general,
+                            dimension_numbers=dimension_numbers,
+                            preferred_element_type=jnp.float32)
+    check = dot(aq, bsum)
+    budget = dot(jnp.abs(aq), babs)
+    nfree = len(rfree)
+    axes = tuple(range(out.ndim - nfree, out.ndim))
+    got = jnp.sum(out.astype(jnp.float32), axis=axes)
+    check = check.reshape(got.shape)
+    budget = budget.reshape(got.shape)
+    return jnp.abs(got - check), budget
+
+
+def violation(out, aq, bq, dimension_numbers, cfg: EulerConfig,
+              gcfg: GuardConfig = DEFAULT):
+    """Per-row violation flags for one op: residual above the calibrated
+    tolerance, or a non-finite row sum (NaR reached the accumulator).  With
+    the fast profile (``gcfg.quantize_check=False``) the operands are the
+    raw f32 values, so the tolerance widens by :func:`quant_eps`."""
+    delta, budget = abft_residual(out, aq, bq, dimension_numbers)
+    eps = check_eps(cfg)
+    if not gcfg.quantize_check:
+        eps += quant_eps(cfg)
+    tol = gcfg.margin * eps * budget + gcfg.atol
+    return (delta > tol) | ~jnp.isfinite(delta)
+
+
+# --------------------------------------------------------------------------
+# Sentinels
+# --------------------------------------------------------------------------
+
+def sentinel_counts(out, cfg: EulerConfig):
+    """(nar, saturated) word counts of the output, re-encoded to posit.
+
+    Counts what a posit write-back of this output would store: NaR words
+    (non-finite accumulations) and words whose regime field is saturated
+    (the format's dynamic-range alarm — B-Posit clamps there).  Uses the
+    same classification as ``reliability.ece.word_flags``."""
+    from repro.reliability.ece import word_flags
+    pc = cfg.posit
+    xf = jnp.asarray(out, jnp.float32)
+    s = _E._pow2_scale(xf) if cfg.pre_scale else jnp.float32(1.0)
+    pats = _P.encode_from_float(xf / s, pc)
+    flags = word_flags(pats, pc)
+    nar = jnp.sum(flags["is_nar"]).astype(jnp.int32)
+    sat = jnp.sum(flags["saturated"] & ~flags["is_zero"]
+                  & ~flags["is_nar"]).astype(jnp.int32)
+    return nar, sat
+
+
+# --------------------------------------------------------------------------
+# Escalation ladder
+# --------------------------------------------------------------------------
+
+def _upwidth(cfg: EulerConfig, width: int) -> EulerConfig:
+    """cfg transplanted to a wider posit word (variant knobs re-derived from
+    the paper's per-width table when the variant is a named one)."""
+    keep = dict(mode=cfg.mode, simd=cfg.simd, out_quant=cfg.out_quant,
+                accum=cfg.accum, fuse_planes=cfg.fuse_planes,
+                pre_scale=cfg.pre_scale, dtype=cfg.dtype)
+    try:
+        return _E.from_variant(width, cfg.variant, **keep)
+    except (ValueError, KeyError):
+        return cfg.replace(width=width)
+
+
+def escalation_ladder(cfg: EulerConfig,
+                      gcfg: GuardConfig = DEFAULT) -> tuple[EulerConfig, ...]:
+    """The bounded recompute sequence for a violated op.
+
+    Same precision first (``retry_same``; a fresh pass through the datapath
+    — recovers transient faults bit-identically), then each next-higher
+    posit width, then exact.  Truncated to ``max_retries`` levels keeping
+    exact as the terminal rung whenever any retry is allowed, so a
+    persistent fault always ends at the immune backend."""
+    if gcfg.max_retries <= 0:
+        return ()
+    steps: list[EulerConfig] = []
+    if gcfg.retry_same and cfg.mode != "exact":
+        steps.append(cfg)
+    if cfg.mode in _POSIT_MODES:
+        for w in (8, 16, 32):
+            if w > cfg.width:
+                steps.append(_upwidth(cfg, w))
+    steps.append(cfg.replace(mode="exact"))
+    if len(steps) > gcfg.max_retries:
+        steps = steps[:gcfg.max_retries - 1] + [steps[-1]]
+    return tuple(steps)
+
+
+# --------------------------------------------------------------------------
+# Stats accumulator (process-wide: debug callbacks may run off-thread)
+# --------------------------------------------------------------------------
+
+_LOCK = threading.Lock()
+_STATS: dict[str, dict] = {}
+_EVENTS: list[dict] = []
+
+_COUNTERS = ("checks", "violations", "retries", "recovered", "unrecovered",
+             "nar_words", "saturated_words", "sentinel_words")
+
+
+def _key(path: str, op: str) -> str:
+    return f"{path or '.'}|{op}"
+
+
+def _record(path, op, words, viol, rows, retries, recovered, unrecovered,
+            nar, sat):
+    with _LOCK:
+        c = _STATS.setdefault(_key(path, op), dict.fromkeys(_COUNTERS, 0))
+        c["checks"] += 1
+        c["violations"] += int(viol)
+        c["retries"] += int(retries)
+        c["recovered"] += int(recovered)
+        c["unrecovered"] += int(unrecovered)
+        c["nar_words"] += int(nar)
+        c["saturated_words"] += int(sat)
+        c["sentinel_words"] += int(words)
+        if bool(viol):
+            _EVENTS.append({
+                "path": path, "op": op,
+                "rows": [bool(r) for r in np.asarray(rows).reshape(-1)],
+                "retries": int(retries), "recovered": bool(recovered),
+                "unrecovered": bool(unrecovered),
+            })
+
+
+def stats(reset: bool = False) -> dict[str, dict]:
+    """Per-dispatch counters: {"<path>|<op>": {checks, violations, retries,
+    recovered, unrecovered, nar_words, saturated_words, sentinel_words}}.
+    Flushes pending device-side callbacks before reading."""
+    jax.effects_barrier()
+    with _LOCK:
+        out = {k: dict(v) for k, v in _STATS.items()}
+        if reset:
+            _STATS.clear()
+    return out
+
+
+def totals(reset: bool = False) -> dict:
+    """Aggregate counters over every dispatch site."""
+    agg = dict.fromkeys(_COUNTERS, 0)
+    for c in stats(reset=reset).values():
+        for k in _COUNTERS:
+            agg[k] += c[k]
+    return agg
+
+
+def drain_events() -> list[dict]:
+    """Pop (and return) the pending violation events — one dict per violated
+    op call, with per-leading-row flags for slot attribution.  The serving
+    scheduler polls this after every decode step."""
+    jax.effects_barrier()
+    with _LOCK:
+        out = _EVENTS[:]
+        _EVENTS.clear()
+    return out
+
+
+def reset():
+    with _LOCK:
+        _STATS.clear()
+        _EVENTS.clear()
+
+
+def snapshot() -> dict:
+    """JSON-able guard state (counters only; events are transient) — what
+    ``serving.failover.DurableBatcher`` persists at step boundaries."""
+    return {"stats": stats()}
+
+
+def load(snap: dict | None):
+    """Restore :func:`snapshot` state (replaces current counters)."""
+    with _LOCK:
+        _STATS.clear()
+        _EVENTS.clear()
+        for k, v in (snap or {}).get("stats", {}).items():
+            c = dict.fromkeys(_COUNTERS, 0)
+            c.update({kk: int(vv) for kk, vv in v.items() if kk in _COUNTERS})
+            _STATS[k] = c
+
+
+# --------------------------------------------------------------------------
+# The guarded op
+# --------------------------------------------------------------------------
+
+def _leading_rows(viol):
+    """Reduce per-row violation flags to the output's leading axis (the
+    batch axis everywhere in this repo's serving path)."""
+    if viol.ndim == 0:
+        return viol[None]
+    return viol.reshape(viol.shape[0], -1).any(axis=1)
+
+
+def guard_call(base, kind: str, a, b, dimension_numbers, cfg: EulerConfig,
+               gcfg: GuardConfig = DEFAULT, *, op: str | None = None,
+               path: str | None = None):
+    """Run one contraction op through ``base`` under the full guard stack:
+    ABFT check, sentinels, cond-gated escalation, stats callback.
+
+    ``kind`` picks the base method ("dot_general" uses the explicit
+    ``dimension_numbers``; named ops use the base's possibly-fused
+    implementation — the dimension numbers describe it for the check).
+    ``op``/``path`` label the stats; by default they come from the numerics
+    dispatcher (``numerics.api.last_dispatch``)."""
+    from repro.numerics import api as _api
+    from repro.reliability import faults as _faults
+    if op is None or path is None:
+        d_op, d_path = _api.last_dispatch()
+        op = op if op is not None else d_op
+        path = path if path is not None else d_path
+
+    if kind == "dot_general":
+        def call(cfg_i):
+            return base.dot_general(a, b, dimension_numbers, cfg_i)
+    else:
+        def call(cfg_i):
+            return getattr(base, kind)(a, b, cfg_i)
+
+    out0 = call(cfg)
+    if gcfg.record == "off" and gcfg.max_retries <= 0:
+        return out0
+
+    if gcfg.quantize_check:
+        aq, bq = _quantize_like(a, cfg), _quantize_like(b, cfg)
+    else:  # fast profile: raw operands, quant_eps-widened tolerance
+        aq = jnp.asarray(a, jnp.float32)
+        bq = jnp.asarray(b, jnp.float32)
+    viol = violation(out0, aq, bq, dimension_numbers, cfg, gcfg)
+    rows = _leading_rows(viol)
+    detected = viol.any()
+
+    if gcfg.sentinels and cfg.mode in _POSIT_MODES:
+        nar, sat = sentinel_counts(out0, cfg)
+        words = int(np.prod(out0.shape)) if out0.shape else 1
+    else:
+        nar = sat = jnp.int32(0)
+        words = 0
+
+    out, still = out0, detected
+    retries = jnp.int32(0)
+    for i, cfg_i in enumerate(escalation_ladder(cfg, gcfg)):
+        def redo(cfg_i=cfg_i, i=i):
+            # trace-time: the retry index decorrelates a FaultPlan's PRNG
+            # stream, so a transient flip is not replayed on the recompute
+            with _faults.retrying(i + 1):
+                o2 = call(cfg_i)
+            if cfg_i == cfg or not gcfg.quantize_check:
+                aq2, bq2 = aq, bq  # check operands are rung-invariant
+            else:
+                aq2 = _quantize_like(a, cfg_i)
+                bq2 = _quantize_like(b, cfg_i)
+            v2 = violation(o2, aq2, bq2, dimension_numbers, cfg_i, gcfg)
+            return o2.astype(out0.dtype), v2.any()
+
+        retries = retries + still.astype(jnp.int32)
+        out, still = jax.lax.cond(
+            still, redo, lambda: (out, jnp.zeros((), bool)))
+
+    if gcfg.record != "off":
+        cb = functools.partial(_record, path, op, words)
+        args = (detected, rows, retries, detected & ~still, still, nar, sat)
+        if gcfg.record == "full":
+            jax.debug.callback(cb, *args)
+        else:  # "events": the clean path never pays a host callback
+            jax.lax.cond(detected,
+                         lambda: jax.debug.callback(cb, *args), lambda: None)
+    return out

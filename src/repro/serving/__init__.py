@@ -1,7 +1,9 @@
-from .engine import (GenerationConfig, QueueFullError, Request,
-                     RequestBatcher, ServeEngine)
+from .engine import (DegradeController, GenerationConfig,
+                     QueueFullError, Request, RequestBatcher, ServeEngine,
+                     SLOConfig)
 from .failover import DurableBatcher, ServeSupervisor, SimulatedCrash
 
 __all__ = ["ServeEngine", "GenerationConfig", "RequestBatcher", "Request",
+           "SLOConfig", "DegradeController",
            "QueueFullError", "DurableBatcher", "ServeSupervisor",
            "SimulatedCrash"]

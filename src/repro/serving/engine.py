@@ -33,7 +33,8 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import Any, Callable
+import time
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +73,8 @@ class ServeEngine:
                  max_len: int = 2048, batch: int = 8, cache_dtype=None,
                  decode_chunk: int = 8,
                  numerics: NumericsContext | None = None,
-                 fault: FaultPlan | None = None):
+                 fault: FaultPlan | None = None,
+                 levels: "Sequence[NumericsContext] | None" = None):
         """``numerics`` (policy + backend) overrides whatever the ctx
         carries — the serving-time precision/backend switch.  With no ctx at
         all, one is derived from the model's own numerics.
@@ -86,7 +88,19 @@ class ServeEngine:
         scan — effective when the numerics backend is a ``faulty:<base>``
         wrapper.  Prefill is never corrupted (faults target the decode
         datapath where tokens are produced).  Reassigning ``self.fault``
-        between runs is safe: the jitted scans are cached per plan."""
+        between runs is safe: the jitted scans are cached per plan.
+
+        ``levels``: optional precision ladder for per-slot degradation —
+        ``levels[0]`` is the engine's primary numerics (it overrides the
+        ``numerics`` argument; highest precision), later entries are the
+        progressively cheaper contexts the scheduler demotes slots to under
+        load.  Slots at different ladder levels decode side by side: each
+        decode step runs one masked scan per *occupied* level and merges
+        caches/tokens per slot, so a slot's stream only ever sees its own
+        level's numerics.  With one level (or none given) the decode path is
+        byte-for-byte the single-context path."""
+        if levels:
+            numerics = levels[0]
         if ctx is None:
             ctx = (model.make_ctx() if hasattr(model, "make_ctx")
                    else Ctx(numerics=numerics))
@@ -103,8 +117,17 @@ class ServeEngine:
         # zero batch-1 cache template for slot prefills (never mutated:
         # prefill is functional, so this stays all-zeros)
         self._cache1 = model.init_cache(1, max_len, cache_dtype)
-        self._prefill = jax.jit(
-            lambda p, toks, cache: model.prefill(p, toks, ctx, cache))
+        # the precision ladder: _ctxs[0] is the primary ctx; every further
+        # level reuses it with only the numerics (and its default ecfg)
+        # swapped, so model wiring is identical across levels
+        self._ctxs = [ctx] + [
+            dataclasses.replace(ctx, numerics=nc, ecfg=nc.policy.default)
+            for nc in (levels or [])[1:]]
+        self._prefill_fns = {
+            lvl: jax.jit(lambda p, toks, cache, c=c:
+                         model.prefill(p, toks, c, cache))
+            for lvl, c in enumerate(self._ctxs)}
+        self._prefill = self._prefill_fns[0]
         self._reset = jax.jit(lambda c: model.reset_cache(c))
         self._reset_slot = jax.jit(lambda c, s: model.reset_cache(c, s))
         self._write_slot_fn = jax.jit(
@@ -115,6 +138,7 @@ class ServeEngine:
         self.last_decode_steps = 0  # decode steps run by the last generate
         self.fault = fault
         self.fault_step = 0  # decode-step counter for step_slots fault keys
+        self.n_levels = len(self._ctxs)
 
     # -- cache lifecycle ------------------------------------------------
 
@@ -128,7 +152,7 @@ class ServeEngine:
 
     # -- jitted decode programs -----------------------------------------
 
-    def _decode_scan(self, gen: GenerationConfig, n: int):
+    def _decode_scan(self, gen: GenerationConfig, n: int, level: int = 0):
         """n masked decode steps, scanned on-device.
 
         Carry: (tok [B], pos [B], done [B], cache, key, fstep).  Finished
@@ -140,13 +164,13 @@ class ServeEngine:
         step index driving the fault-injection window/keys; it advances even
         with no fault plan so the carry structure is uniform."""
         cache_key = (gen.temperature, gen.top_k, gen.eos_id, gen.pad_id, n,
-                     self.fault)
+                     self.fault, level)
         if cache_key in self._scan_cache:
             return self._scan_cache[cache_key]
         pad = jnp.int32(gen.pad_id)
         eos = gen.eos_id
         maxpos = self.max_len - 1
-        model, ctx, fault = self.model, self.ctx, self.fault
+        model, ctx, fault = self.model, self._ctxs[level], self.fault
 
         def run(params, tok, pos, done, cache, key, fstep):
             def body(carry, _):
@@ -220,36 +244,73 @@ class ServeEngine:
     # -- slot-level primitives (used by the scheduler) -------------------
 
     def prefill_slot(self, slot: int, prompt_tokens, gen: GenerationConfig,
-                     key) -> int:
+                     key, level: int = 0) -> int:
         """Prefill one request into ``slot`` and return its first token.
 
         Runs a batch-1 prefill over the request's own bucket on a zero
         cache and writes the resulting cache into the slot.  The write is a
         FULL overwrite of every cache leaf's slot row (KV slabs, SSM state,
         conv tail), i.e. it subsumes ``reset_slot`` — that is what makes
-        stale-state leaks into a refilled slot impossible."""
+        stale-state leaks into a refilled slot impossible.  ``level`` picks
+        the precision-ladder context the request was admitted at."""
         toks = jnp.asarray(prompt_tokens, jnp.int32)[None, :]
-        logits, c1 = self._prefill(self.params, toks, self._cache1)
+        logits, c1 = self._prefill_fns[level](self.params, toks, self._cache1)
         self.cache = self._write_slot_fn(self.cache, c1, jnp.int32(slot))
         return int(_sample(logits, gen, key)[0])
 
-    def step_slots(self, gen: GenerationConfig, tok, pos, active, key):
+    @staticmethod
+    def _slot_mask(m, leaf):
+        """Broadcast a [B] slot mask over a cache leaf (slot axis = 1)."""
+        return m.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+
+    def step_slots(self, gen: GenerationConfig, tok, pos, active, key,
+                   level=None):
         """One masked decode step over all slots.
 
         ``tok``/``pos``: [B] host arrays; ``active``: [B] bool.  Inactive
         slots are fed as done (emit pad, frozen position).  Returns the
         emitted [B] tokens (numpy) and the threaded PRNG key; the cache
         advances on the engine, as does ``fault_step`` (the scheduler-path
-        decode-step counter for fault-injection keys)."""
-        scan = self._decode_scan(gen, 1)
-        (_, _, _, cache, key, _), toks = scan(
-            self.params, jnp.asarray(tok, jnp.int32),
-            jnp.asarray(pos, jnp.int32),
-            jnp.asarray(~np.asarray(active, bool)), self.cache, key,
-            jnp.int32(self.fault_step))
-        self.cache = cache
+        decode-step counter for fault-injection keys).
+
+        ``level``: optional [B] precision-ladder indices.  When every active
+        slot shares one level this is exactly one masked scan (the fast
+        path, bit-identical to the level-free call); mixed levels run one
+        scan per occupied level — each from the SAME pre-step cache with the
+        other levels' slots masked done — and the caches/tokens are merged
+        per slot, so no slot's stream or cache row is ever touched by
+        another level's numerics."""
+        act = np.asarray(active, bool)
+        tok = jnp.asarray(tok, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        lvls = (np.zeros(act.shape, np.int32) if level is None
+                else np.asarray(level, np.int32))
+        used = sorted({int(l) for l, a in zip(lvls, act) if a}) or [0]
+        fstep = jnp.int32(self.fault_step)
+        if len(used) == 1:
+            scan = self._decode_scan(gen, 1, used[0])
+            (_, _, _, cache, key, _), toks = scan(
+                self.params, tok, pos, jnp.asarray(~act), self.cache, key,
+                fstep)
+            self.cache = cache
+            self.fault_step += 1
+            return np.asarray(toks[0]), key
+        base = self.cache
+        merged, out = base, None
+        for lvl in used:
+            sel = act & (lvls == lvl)
+            scan = self._decode_scan(gen, 1, lvl)
+            (_, _, _, cache_l, key, _), toks = scan(
+                self.params, tok, pos, jnp.asarray(~sel), base, key, fstep)
+            m = jnp.asarray(sel)
+            merged = jax.tree.map(
+                lambda a, b, m=m: jnp.where(self._slot_mask(m, a), b, a),
+                merged, cache_l)
+            t = toks[0]
+            out = t if out is None else jnp.where(m, t, out)
+        self.cache = merged
         self.fault_step += 1
-        return np.asarray(toks[0]), key
+        return np.asarray(out), key
 
 
 @dataclasses.dataclass
@@ -259,10 +320,65 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    deadline_ms: float | None = None  # wall-clock SLO from submit time
+    submit_t: float = 0.0             # batcher-clock timestamp of submit()
+    level: int = 0                    # precision-ladder index (0 = highest)
+    attempts: int = 0                 # guard-triggered re-enqueues so far
+    status: str = "ok"                # ok | timeout | failed
 
 
 class QueueFullError(RuntimeError):
     """submit() on a batcher whose queue is at max_queue capacity."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Degradation thresholds for SLO-aware precision throttling.
+
+    Every ``queue_hi`` queued requests push newly-admitted slots one level
+    down the engine's precision ladder; a recent-window p99 step latency
+    above ``p99_ms`` adds one more.  Levels clamp to the ladder length, so a
+    1-level engine never degrades (the config is then inert)."""
+
+    queue_hi: int = 8
+    p99_ms: float | None = None
+    window: int = 64              # step-latency samples kept for the p99
+
+    def __post_init__(self):
+        if self.queue_hi <= 0:
+            raise ValueError(f"queue_hi must be > 0, got {self.queue_hi}")
+        if self.window <= 0:
+            raise ValueError(f"window must be > 0, got {self.window}")
+
+
+class DegradeController:
+    """Maps instantaneous load to an admission precision level.
+
+    Pure policy over observations the batcher feeds it (queue depth at
+    admission, per-step wall latency) — it never touches the engine, so the
+    demote-on-admission point stays the single place levels are assigned.
+    """
+
+    def __init__(self, slo: SLOConfig, n_levels: int):
+        self.slo = slo
+        self.n_levels = n_levels
+        self._lat: list[float] = []
+
+    def record_step(self, dt_ms: float):
+        self._lat.append(float(dt_ms))
+        if len(self._lat) > self.slo.window:
+            del self._lat[:len(self._lat) - self.slo.window]
+
+    def p99_ms(self) -> float:
+        if not self._lat:
+            return 0.0
+        return float(np.percentile(np.asarray(self._lat), 99))
+
+    def admission_level(self, queue_depth: int) -> int:
+        lvl = queue_depth // self.slo.queue_hi
+        if self.slo.p99_ms is not None and self.p99_ms() > self.slo.p99_ms:
+            lvl += 1
+        return min(lvl, self.n_levels - 1)
 
 
 @dataclasses.dataclass
@@ -289,6 +405,11 @@ class _RunState:
     active: np.ndarray        # [B] bool
     step: int = 0             # decode steps taken in this run
     results: dict = dataclasses.field(default_factory=dict)
+    level: np.ndarray = None  # [B] per-slot precision-ladder index
+
+
+_FRESH_STATS = {"steps": 0, "refills": 0, "truncated": 0, "timeouts": 0,
+                "guard_retries": 0, "demotions": 0}
 
 
 class RequestBatcher:
@@ -303,7 +424,18 @@ class RequestBatcher:
     """
 
     def __init__(self, engine: ServeEngine, prompt_buckets=(128, 512, 2048),
-                 max_queue: int | None = None):
+                 max_queue: int | None = None, *,
+                 slo: SLOConfig | None = None,
+                 guard_retry: int = 0, clock: Callable[[], float] = None):
+        """``slo``: enable SLO-aware degradation — incoming requests are
+        admitted at ``DegradeController.admission_level`` of the engine's
+        precision ladder instead of always at level 0.  ``guard_retry``: max
+        guard-triggered re-enqueues per request — when the ``guarded:``
+        backend reports an *unrecovered* checksum violation on a slot's row,
+        the slot is torn down and its request re-enqueued (front of queue)
+        one level HIGHER precision; past the bound it retires with status
+        "failed".  ``clock``: injectable monotonic-seconds source for
+        deadlines/latency (tests pin it; defaults to ``time.monotonic``)."""
         self.engine = engine
         buckets = sorted(b for b in prompt_buckets if b < engine.max_len)
         if not buckets:
@@ -317,19 +449,37 @@ class RequestBatcher:
                         sorted(set(prompt_buckets) - set(buckets)))
         self.buckets = buckets
         self.max_queue = max_queue
+        self.clock = clock if clock is not None else time.monotonic
+        self.slo = slo
+        self.guard_retry = guard_retry
+        self.controller = (DegradeController(slo, engine.n_levels)
+                           if slo is not None else None)
         self.queue: list[Request] = []
         self._next_rid = 0
-        self.events: list[tuple] = []   # ("admit"|"refill"|"done", rid, slot, step)
-        self.stats = {"steps": 0, "refills": 0, "truncated": 0}
+        # ("admit"|"refill"|"done"|"timeout"|"guard_retry", rid, slot, step)
+        self.events: list[tuple] = []
+        self.stats = dict(_FRESH_STATS)
+        self.statuses: dict[int, str] = {}   # rid -> final status
 
-    def submit(self, prompt, max_new: int = 32) -> int:
+    def submit(self, prompt, max_new: int = 32,
+               deadline_ms: float | None = None) -> int:
+        """Enqueue a prompt; ``deadline_ms`` is a wall-clock SLO measured
+        from now — a request not finished by then retires with status
+        "timeout" (partial tokens if it was mid-decode) instead of holding
+        its slot."""
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             raise QueueFullError(
                 f"queue full ({len(self.queue)} >= max_queue={self.max_queue})")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new,
+                                  deadline_ms=deadline_ms,
+                                  submit_t=self.clock()))
         return rid
+
+    def _expired(self, r: Request, now: float) -> bool:
+        return (r.deadline_ms is not None
+                and (now - r.submit_t) * 1000.0 > r.deadline_ms)
 
     def _bucket(self, n: int) -> int:
         for b in self.buckets:
@@ -381,7 +531,8 @@ class RequestBatcher:
         eng = self.engine
         B = eng.batch
         self.events = []
-        self.stats = {"steps": 0, "refills": 0, "truncated": 0}
+        self.stats = dict(_FRESH_STATS)
+        self.statuses = {}
         eng.reset_all()
         eng.fault_step = 0
         st = _RunState(
@@ -389,7 +540,8 @@ class RequestBatcher:
             cap_budget=gen is not None,
             key=key if key is not None else jax.random.PRNGKey(0),
             slots=[None] * B, tok=np.zeros(B, np.int32),
-            pos=np.zeros(B, np.int64), active=np.zeros(B, bool))
+            pos=np.zeros(B, np.int64), active=np.zeros(B, bool),
+            level=np.zeros(B, np.int32))
         self._state = st
         return st
 
@@ -397,16 +549,83 @@ class RequestBatcher:
         return (min(r.max_new, st.gen.max_new_tokens) if st.cap_budget
                 else r.max_new)
 
-    def _retire(self, st: _RunState, s: int, on_complete):
+    def _retire(self, st: _RunState, s: int, on_complete,
+                status: str = "ok"):
         slot = st.slots[s]
         r = slot.req
         r.done = True
+        r.status = status
         st.results[r.rid] = np.asarray(r.out, np.int32)
-        self.events.append(("done", r.rid, s, st.step))
+        self.statuses[r.rid] = status
+        kind = "done" if status == "ok" else status
+        self.events.append((kind, r.rid, s, st.step))
+        if status == "timeout":
+            self.stats["timeouts"] += 1
         if on_complete is not None:
             on_complete(r.rid, st.results[r.rid])
         st.slots[s] = None
         st.active[s] = False
+
+    def _complete_unadmitted(self, st: _RunState, r: Request, s: int,
+                             on_complete, status: str, tokens=()):
+        """Finish a request that never (re)entered a slot — zero-budget
+        submissions and queue-expired deadlines."""
+        r.done = True
+        r.status = status
+        st.results[r.rid] = np.asarray(list(tokens), np.int32)
+        self.statuses[r.rid] = status
+        kind = "done" if status == "ok" else status
+        self.events.append((kind, r.rid, s, st.step))
+        if status == "timeout":
+            self.stats["timeouts"] += 1
+        if on_complete is not None:
+            on_complete(r.rid, st.results[r.rid])
+
+    def _expire_slots(self, st: _RunState, on_complete):
+        """Retire every active slot whose deadline has passed — with partial
+        tokens and status "timeout".  Neighbour slots are untouched: retire
+        only flips this slot's host-side active flag, and the next admission
+        fully overwrites the slot's cache row."""
+        now = self.clock()
+        for s in range(self.engine.batch):
+            if st.slots[s] is not None and self._expired(st.slots[s].req, now):
+                self._retire(st, s, on_complete, status="timeout")
+
+    def _drain_guard_events(self, st: _RunState, on_complete,
+                            prefill_slot: int | None = None):
+        """Poll the guarded backend's violation events and re-enqueue any
+        slot an UNRECOVERED violation landed on (the op-level escalation
+        ladder already absorbed recovered ones).  The re-enqueued request
+        restarts from scratch one precision level higher, at the front of
+        the queue; after ``guard_retry`` attempts it retires as "failed".
+        ``prefill_slot``: attribute batch-1 (prefill-time) events to that
+        slot instead of by row index."""
+        from repro.numerics import api as _napi
+        hit: set[int] = set()
+        for ev in _napi.drain_guard_events():
+            if not ev.get("unrecovered"):
+                continue
+            rows = ev.get("rows") or []
+            if prefill_slot is not None:
+                hit.add(prefill_slot)
+            else:
+                hit.update(s for s, f in enumerate(
+                    rows[:self.engine.batch]) if f)
+        for s in sorted(hit):
+            if st.slots[s] is None:
+                continue
+            r = st.slots[s].req
+            if r.attempts >= self.guard_retry:
+                self._retire(st, s, on_complete, status="failed")
+                continue
+            r.attempts += 1
+            r.level = max(0, r.level - 1)
+            r.out = []
+            self.events.append(("guard_retry", r.rid, s, st.step))
+            self.stats["guard_retries"] += 1
+            st.slots[s] = None
+            st.active[s] = False
+            self.queue.insert(0, r)
 
     def _admit(self, st: _RunState, s: int, on_complete) -> bool:
         """Pull the next request into slot ``s``; returns True if the
@@ -415,13 +634,21 @@ class RequestBatcher:
         eng = self.engine
         while self.queue:
             r = self.queue.pop(0)
-            if self._budget(st, r) <= 0:  # zero-token request: complete empty
-                r.done = True
-                st.results[r.rid] = np.zeros(0, np.int32)
-                self.events.append(("done", r.rid, s, st.step))
-                if on_complete is not None:
-                    on_complete(r.rid, st.results[r.rid])
+            if self._expired(r, self.clock()):  # dead on arrival at a slot
+                self._complete_unadmitted(st, r, s, on_complete, "timeout",
+                                          tokens=r.out)
                 continue
+            if self._budget(st, r) <= 0:  # zero-token request: complete empty
+                self._complete_unadmitted(st, r, s, on_complete, "ok")
+                continue
+            if self.controller is not None and r.attempts == 0:
+                # SLO degradation assigns the admission level; guard-retried
+                # requests keep their promoted level instead
+                lvl = self.controller.admission_level(len(self.queue))
+                if lvl > 0:
+                    self.stats["demotions"] += 1
+                r.level = lvl
+            r.level = min(r.level, eng.n_levels - 1)
             packed = self._pack(r)
             # last cache write lands at bucket + budget - 2 (the final
             # emitted token is never fed back), so clamping only kicks
@@ -432,17 +659,23 @@ class RequestBatcher:
                     "late cache writes clamp to the last position",
                     r.rid, len(packed), self._budget(st, r), eng.max_len)
             st.key, sub = jax.random.split(st.key)
-            first = eng.prefill_slot(s, packed, st.gen, sub)
+            first = eng.prefill_slot(s, packed, st.gen, sub, level=r.level)
             kind = "refill" if st.step > 0 else "admit"
             self.events.append((kind, r.rid, s, st.step))
             if kind == "refill":
                 self.stats["refills"] += 1
             st.slots[s] = _Slot(req=r, budget=self._budget(st, r))
+            st.level[s] = r.level
             r.out.append(first)
             st.slots[s].budget -= 1
             st.tok[s] = first
             st.pos[s] = len(packed)
             st.active[s] = True
+            if self.guard_retry:
+                # a violation during THIS batch-1 prefill belongs to slot s
+                self._drain_guard_events(st, on_complete, prefill_slot=s)
+                if st.slots[s] is None:  # re-enqueued (or failed) already
+                    continue
             hit_eos = (st.gen.eos_id is not None
                        and first == st.gen.eos_id)
             if st.slots[s].budget <= 0 or hit_eos:
@@ -468,11 +701,19 @@ class RequestBatcher:
                 break
             if max_steps is not None and steps_this_call >= max_steps:
                 break  # yield with resumable state (simulated kill point)
+            t0 = self.clock()
             emitted, st.key = eng.step_slots(st.gen, st.tok, st.pos,
-                                             st.active, st.key)
+                                             st.active, st.key,
+                                             level=st.level)
+            if self.controller is not None:
+                self.controller.record_step((self.clock() - t0) * 1000.0)
             st.step += 1
             steps_this_call += 1
             self.stats["steps"] += 1
+            if self.guard_retry:
+                # unrecovered violations tear the slot down BEFORE its
+                # (corrupted) token is appended to the request stream
+                self._drain_guard_events(st, on_complete)
             for s in range(B):
                 if st.slots[s] is None:
                     continue
@@ -485,6 +726,7 @@ class RequestBatcher:
                            and t == st.gen.eos_id)
                 if st.slots[s].budget <= 0 or hit_eos:
                     self._retire(st, s, on_complete)
+            self._expire_slots(st, on_complete)
             self._on_step_boundary(st)
         return st.results
 

@@ -33,6 +33,7 @@ import numpy as np
 from repro.distributed import checkpoint
 from repro.distributed.failover import (Action, FailoverPolicy,
                                         HeartbeatMonitor, StragglerDetector)
+from repro.reliability import guards
 from repro.reliability.faults import FaultPlan
 from repro.serving.engine import (GenerationConfig, Request, RequestBatcher,
                                   ServeEngine, _RunState, _Slot)
@@ -57,8 +58,8 @@ class DurableBatcher(RequestBatcher):
     def __init__(self, engine: ServeEngine, prompt_buckets=(128, 512, 2048),
                  max_queue: int | None = None, *, ckpt_dir: str,
                  snapshot_every: int = 4, keep: int = 3,
-                 on_step: Callable[[int], None] | None = None):
-        super().__init__(engine, prompt_buckets, max_queue)
+                 on_step: Callable[[int], None] | None = None, **kw):
+        super().__init__(engine, prompt_buckets, max_queue, **kw)
         self.ckpt_dir = ckpt_dir
         self.snapshot_every = max(1, snapshot_every)
         self.keep = keep
@@ -74,7 +75,8 @@ class DurableBatcher(RequestBatcher):
 
     def _array_tree(self, st: _RunState) -> dict:
         return {"cache": self.engine.cache, "key": st.key,
-                "tok": st.tok, "pos": st.pos, "active": st.active}
+                "tok": st.tok, "pos": st.pos, "active": st.active,
+                "level": st.level}
 
     def snapshot(self, st: _RunState) -> str:
         """Persist the complete drain state; returns the checkpoint dir."""
@@ -97,15 +99,20 @@ class DurableBatcher(RequestBatcher):
                       for s in st.slots],
             "requests": [{"rid": r.rid, "prompt": [int(t) for t in r.prompt],
                           "max_new": r.max_new, "out": [int(t) for t in r.out],
-                          "done": r.done} for r in seen.values()],
+                          "done": r.done, "deadline_ms": r.deadline_ms,
+                          "submit_t": r.submit_t, "level": r.level,
+                          "attempts": r.attempts, "status": r.status}
+                         for r in seen.values()],
             "queue": [r.rid for r in self.queue],
             "next_rid": self._next_rid,
             "results": {str(k): [int(t) for t in v]
                         for k, v in st.results.items()},
             "events": [list(e) for e in self.events],
             "stats": dict(self.stats),
+            "statuses": {str(k): v for k, v in self.statuses.items()},
             "fault": None if eng.fault is None else eng.fault.to_dict(),
             "fault_step": eng.fault_step,
+            "guards": guards.snapshot(),
         }
         return checkpoint.save(self.ckpt_dir, st.step, self._array_tree(st),
                                keep=self.keep, extra=extra)
@@ -124,22 +131,31 @@ class DurableBatcher(RequestBatcher):
         B = eng.batch
         target = {"cache": eng.cache, "key": jax.random.PRNGKey(0),
                   "tok": np.zeros(B, np.int32), "pos": np.zeros(B, np.int64),
-                  "active": np.zeros(B, bool)}
+                  "active": np.zeros(B, bool),
+                  "level": np.zeros(B, np.int32)}
         tree, ck_step, extra = checkpoint.restore(self.ckpt_dir, target,
                                                   step=step)
         eng.cache = tree["cache"]
         eng.fault = (None if extra["fault"] is None
                      else FaultPlan.from_dict(extra["fault"]))
         eng.fault_step = extra["fault_step"]
+        guards.load(extra.get("guards"))
         reqs = {rec["rid"]: Request(rec["rid"],
                                     np.asarray(rec["prompt"], np.int32),
                                     rec["max_new"], out=list(rec["out"]),
-                                    done=rec["done"])
+                                    done=rec["done"],
+                                    deadline_ms=rec.get("deadline_ms"),
+                                    submit_t=rec.get("submit_t", 0.0),
+                                    level=rec.get("level", 0),
+                                    attempts=rec.get("attempts", 0),
+                                    status=rec.get("status", "ok"))
                 for rec in extra["requests"]}
         self.queue = [reqs[rid] for rid in extra["queue"]]
         self._next_rid = extra["next_rid"]
         self.events = [tuple(e) for e in extra["events"]]
         self.stats = dict(extra["stats"])
+        self.statuses = {int(k): v
+                         for k, v in extra.get("statuses", {}).items()}
         st = _RunState(
             gen=GenerationConfig(**extra["gen"]),
             cap_budget=extra["cap_budget"],
@@ -152,7 +168,8 @@ class DurableBatcher(RequestBatcher):
             active=np.array(jax.device_get(tree["active"]), bool),
             step=extra["step"],
             results={int(k): np.asarray(v, np.int32)
-                     for k, v in extra["results"].items()})
+                     for k, v in extra["results"].items()},
+            level=np.array(jax.device_get(tree["level"]), np.int32))
         self._state = st
         log.info("resumed serve drain from step %d (%d in flight, %d queued)",
                  ck_step, sum(s is not None for s in st.slots),

@@ -1,0 +1,221 @@
+"""ABFT guard layer (``repro.reliability.guards``): exhaustive detection of
+regime/exponent bit flips at the calibrated tolerance, zero false positives
+on clean posit matmuls, and the detect -> escalate -> recover ladder through
+the ``guarded:<base>`` numerics backend."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import posit as P
+from repro.core.engine import EulerConfig
+from repro.numerics.backends import faulty, get_backend, guarded
+from repro.reliability import guards as G
+from repro.reliability.faults import FaultPlan, inject, role_mask
+
+
+MATMUL_DN = (((1,), (0,)), ((), ()))
+
+
+# ---------------------------------------------------------------------------
+# GuardConfig / check_eps
+# ---------------------------------------------------------------------------
+
+def test_guard_config_validation():
+    with pytest.raises(ValueError, match="record mode"):
+        G.GuardConfig(record="sometimes")
+    with pytest.raises(ValueError, match="max_retries"):
+        G.GuardConfig(max_retries=-1)
+    with pytest.raises(ValueError, match="margin"):
+        G.GuardConfig(margin=0.0)
+
+
+def test_check_eps_orderings():
+    """The euler multiplier tolerance shrinks with more ILM stages and grows
+    with output re-quantization; posit modes sit at the f32 floor."""
+    p = G.check_eps(EulerConfig(mode="posit", width=16))
+    e2 = G.check_eps(EulerConfig(mode="euler", width=16, stages=2))
+    e3 = G.check_eps(EulerConfig(mode="euler", width=16, stages=3))
+    eq = G.check_eps(EulerConfig(mode="euler", width=16, stages=2,
+                                 out_quant=True))
+    assert p < e3 < e2 < eq
+
+
+def test_escalation_ladder_shape():
+    cfg = EulerConfig(mode="posit", width=8)
+    ladder = G.escalation_ladder(cfg, G.GuardConfig(max_retries=4))
+    assert ladder[0] == cfg                      # same-precision first
+    assert [c.width for c in ladder[1:3]] == [16, 32]
+    assert ladder[-1].mode == "exact"            # immune terminal rung
+    short = G.escalation_ladder(cfg, G.GuardConfig(max_retries=2))
+    assert len(short) == 2 and short[-1].mode == "exact"
+    assert G.escalation_ladder(cfg, G.GuardConfig(max_retries=0)) == ()
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive Posit-8 flip detection (the satellite bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width,role", [(8, "regime_run"), (8, "regime_term"),
+                                        (16, "regime_run"), (16, "exponent")])
+def test_flips_exhaustively_detected(width, role):
+    """EVERY single-bit flip of a regime/exponent bit of every valid word
+    trips the ABFT check at the calibrated tolerance (P8 has es=0, so the
+    exponent sweep runs at P16).
+
+    Each word ``v`` is embedded as the 1x1 contraction ``[v] . [1]`` whose
+    corrupted output is the decoded flipped word — the minimal op where the
+    residual is exactly the flip's value blast and the budget is ``|v|``.
+    """
+    cfg = EulerConfig(mode="posit", width=width)
+    pc = cfg.posit
+    pats = jnp.arange(1 << width, dtype=jnp.uint32)
+    f = P.decode_fields(pats, pc)
+    valid = ~(np.asarray(f["is_zero"]) | np.asarray(f["is_nar"]))
+    mask = np.asarray(role_mask(pats, pc, role))
+    gcfg = G.GuardConfig(atol=0.0)  # no absolute floor: detect at any scale
+
+    bits = ((mask[:, None] >> np.arange(width)[None, :]) & 1).astype(bool)
+    p_idx, b_idx = np.nonzero(bits & valid[:, None])
+    pairs = list(zip(p_idx.tolist(), (p_idx ^ (1 << b_idx)).tolist()))
+    # genuinely exhaustive: one pair per (valid word, role bit)
+    assert len(pairs) == int((bits & valid[:, None]).sum()) and pairs
+    orig, flip = (jnp.asarray(c, jnp.uint32) for c in zip(*pairs))
+    v = P.decode_to_float(orig, pc).reshape(-1, 1)
+    vf = P.decode_to_float(flip, pc).reshape(-1, 1)
+    # out[i] = corrupted datapath result of row i's 1x1 matmul
+    viol = G.violation(vf, v, jnp.ones((1, 1), jnp.float32), MATMUL_DN,
+                       cfg, gcfg)
+    assert bool(viol.all()), (
+        f"{int((~viol).sum())}/{len(pairs)} {role}-bit flips escaped the "
+        "calibrated tolerance")
+
+
+@pytest.mark.parametrize("width", [8, 16, 32])
+def test_clean_matmuls_never_false_positive(width):
+    """Seed sweep: clean posit matmuls at every width stay strictly inside
+    the calibrated tolerance (guarded backend, full recording)."""
+    cfg = EulerConfig(mode="posit", width=width)
+    gb = guarded("lax_ref", G.GuardConfig(record="full"))
+    base = get_backend("lax_ref")
+    G.reset()
+    for seed in range(5):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a = jax.random.normal(k1, (8, 16)) * 3.0
+        b = jax.random.normal(k2, (16, 8))
+        out = gb.matmul(a, b, cfg)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(base.matmul(a, b, cfg)))
+    t = G.totals(reset=True)
+    assert t["checks"] == 5 and t["violations"] == 0, t
+
+
+def test_euler_modes_no_false_positive():
+    """The ILM-multiplier modes clear the check too (their residual is the
+    bounded multiplier error the tolerance is calibrated for)."""
+    gb = guarded("lax_ref", G.GuardConfig(record="full"))
+    G.reset()
+    for cfg in (EulerConfig(mode="euler", width=16, stages=2),
+                EulerConfig(mode="euler", width=8, stages=2, out_quant=True),
+                EulerConfig(mode="exact")):
+        a = jax.random.normal(jax.random.PRNGKey(3), (4, 12))
+        b = jax.random.normal(jax.random.PRNGKey(4), (12, 4))
+        gb.matmul(a, b, cfg)
+    t = G.totals(reset=True)
+    assert t["checks"] == 3 and t["violations"] == 0, t
+
+
+# ---------------------------------------------------------------------------
+# Detect -> escalate -> recover through guarded:faulty:<base>
+# ---------------------------------------------------------------------------
+
+def _faulted_matmul(gcfg, plan, seed=0, shape=(16, 32, 16), width=16):
+    cfg = EulerConfig(mode="posit", width=width)
+    m, k, n = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (m, k))
+    b = jax.random.normal(k2, (k, n))
+    gb = guarded(faulty("lax_ref"), gcfg)
+    clean = get_backend("lax_ref").matmul(a, b, cfg)
+
+    @jax.jit
+    def run(a, b, key):
+        with inject(plan, key, jnp.int32(0)):
+            return gb.matmul(a, b, cfg)
+
+    out = run(a, b, jax.random.PRNGKey(seed + 100))
+    return np.asarray(out), np.asarray(clean)
+
+
+def test_guard_detects_and_recovers_regime_faults():
+    """Injected regime flips are detected and every violated op recovers
+    through the ladder; the result stays within quantization distance of the
+    clean run (bit-identical when the same-precision rung lands clean)."""
+    plan = FaultPlan(seed=7, rate=0.01, role="regime_run", operand="a")
+    G.reset()
+    out, clean = _faulted_matmul(G.GuardConfig(record="full", atol=0.0),
+                                 plan)
+    t = G.totals(reset=True)
+    assert t["violations"] >= 1, t
+    assert t["unrecovered"] == 0, t
+    assert t["recovered"] == t["violations"], t
+    assert np.isfinite(out).all()
+    # escalated rungs requantize operands at higher precision: allow the
+    # P16 operand-quantization delta, nothing fault-sized
+    np.testing.assert_allclose(out, clean, rtol=3e-2, atol=3e-2)
+
+
+def test_guard_detect_only_counts_without_recompute():
+    plan = FaultPlan(seed=7, rate=0.01, role="regime_run", operand="a")
+    G.reset()
+    out, clean = _faulted_matmul(
+        G.GuardConfig(record="full", atol=0.0, max_retries=0), plan)
+    t = G.totals(reset=True)
+    assert t["violations"] >= 1 and t["retries"] == 0, t
+    assert t["unrecovered"] == t["violations"], t  # nothing was recomputed
+    assert not np.allclose(out, clean, rtol=3e-2, atol=3e-2)  # damage stays
+
+
+def test_guard_events_carry_row_flags():
+    plan = FaultPlan(seed=7, rate=0.01, role="regime_run", operand="a")
+    G.reset()
+    _faulted_matmul(G.GuardConfig(record="events", atol=0.0,
+                                  sentinels=False), plan)
+    evs = G.drain_events()
+    assert evs, "no violation events drained"
+    for ev in evs:
+        assert ev["recovered"] and not ev["unrecovered"]
+        assert any(ev["rows"]), ev  # at least one hit row for attribution
+    assert G.drain_events() == []  # drained means drained
+
+
+def test_guard_stats_snapshot_roundtrip():
+    G.reset()
+    G._record("layer/0", "matmul", 64, True, np.array([True]), 2, True,
+              False, 1, 3)
+    snap = G.snapshot()
+    G.reset()
+    assert G.totals() == dict.fromkeys(G._COUNTERS, 0)
+    G.load(snap)
+    t = G.totals(reset=True)
+    assert t["violations"] == 1 and t["retries"] == 2
+    assert t["nar_words"] == 1 and t["saturated_words"] == 3
+
+
+def test_guarded_backend_name_composition():
+    gb = get_backend("guarded:faulty:lax_ref")
+    assert gb.name == "guarded:faulty:lax_ref"
+    assert get_backend("guarded:lax_ref").name == "guarded:lax_ref"
+
+
+def test_faultplan_validation():
+    with pytest.raises(ValueError, match="inverted step window"):
+        FaultPlan(start_step=5, end_step=3)
+    with pytest.raises(ValueError, match="start_step"):
+        FaultPlan(start_step=-1)
+    with pytest.raises(ValueError, match="rate"):
+        FaultPlan(rate=1.5)
+    with pytest.raises(ValueError, match="bit role"):
+        FaultPlan(role="parity")
+    with pytest.raises(ValueError, match="operand"):
+        FaultPlan(operand="c")

@@ -2,8 +2,17 @@
 Gamma_B > 1 at the paper's operating points."""
 import pytest
 
+from repro import reliability as R
 from repro.core import posit as P
-from repro.core import reliability as R
+
+
+def test_core_reliability_shim_warns():
+    """The old ``repro.core.reliability`` alias still resolves but is
+    deprecated: attribute access emits a DeprecationWarning."""
+    from repro.core import reliability as old
+    with pytest.warns(DeprecationWarning, match="repro.reliability"):
+        fn = old.improvement_factor
+    assert fn is R.improvement_factor
 
 
 @pytest.mark.parametrize("width", [8, 16])

@@ -356,3 +356,179 @@ def test_refill_slot_no_state_leak(engine2):
         res[rc], _single_request_baseline(engine2, p_c, 4))
     np.testing.assert_array_equal(
         res[rb], _single_request_baseline(engine2, p_b, 8))
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant serving: deadlines, SLO degradation, guard-triggered retry
+# ---------------------------------------------------------------------------
+
+class _TickClock:
+    """Deterministic clock: every call advances a fixed number of seconds."""
+
+    def __init__(self, dt=0.1):
+        self.t, self.dt = 0.0, dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+def test_deadline_timeout_neighbours_bit_identical(engine2):
+    """The acceptance bar: a deadline-expired request retires mid-stream
+    with status "timeout" and partial tokens, and its co-scheduled
+    neighbour's tokens stay bit-identical to a single-request run."""
+    rng = np.random.default_rng(11)
+    p_a = rng.integers(0, CFG.vocab, 6)
+    p_b = rng.integers(0, CFG.vocab, 9)
+    b = RequestBatcher(engine2, prompt_buckets=(8, 16), clock=_TickClock())
+    ra = b.submit(p_a, max_new=12)                      # no deadline
+    rb = b.submit(p_b, max_new=12, deadline_ms=1200.0)  # dies mid-decode
+    res = b.run()
+    assert b.statuses[rb] == "timeout"
+    assert b.statuses[ra] == "ok"
+    assert 0 < len(res[rb]) < 12, "timeout should leave partial tokens"
+    assert b.stats["timeouts"] == 1
+    assert ("timeout", rb, 1, ) == tuple(
+        e[:3] for e in b.events if e[0] == "timeout")[0]
+    np.testing.assert_array_equal(
+        res[ra], _single_request_baseline(engine2, p_a, 12),
+        err_msg="neighbour slot corrupted by a co-scheduled timeout")
+
+
+def test_deadline_expired_in_queue_never_admitted(engine2):
+    """A request whose deadline passes while still queued completes as
+    "timeout" with zero tokens (no prefill, no slot held)."""
+    rng = np.random.default_rng(12)
+    b = RequestBatcher(engine2, prompt_buckets=(8,), clock=_TickClock())
+    ra = b.submit(rng.integers(0, CFG.vocab, 4), max_new=10)
+    rb = b.submit(rng.integers(0, CFG.vocab, 4), max_new=10)
+    rc = b.submit(rng.integers(0, CFG.vocab, 4), max_new=10,
+                  deadline_ms=200.0)  # expires before a slot frees
+    res = b.run()
+    assert b.statuses[rc] == "timeout"
+    assert len(res[rc]) == 0
+    assert all(len(res[r]) == 10 for r in (ra, rb))
+    admitted = {rid for ev, rid, *_ in b.events if ev in ("admit", "refill")}
+    assert rc not in admitted
+
+
+def test_degrade_controller_policy():
+    from repro.serving import DegradeController, SLOConfig
+    with pytest.raises(ValueError, match="queue_hi"):
+        SLOConfig(queue_hi=0)
+    with pytest.raises(ValueError, match="window"):
+        SLOConfig(queue_hi=2, window=0)
+    c = DegradeController(SLOConfig(queue_hi=4, p99_ms=50.0, window=8),
+                          n_levels=3)
+    assert c.admission_level(0) == 0
+    assert c.admission_level(4) == 1
+    assert c.admission_level(8) == 2
+    assert c.admission_level(40) == 2          # clamped to the ladder
+    for _ in range(8):
+        c.record_step(100.0)                   # p99 breach adds one level
+    assert c.admission_level(0) == 1
+    assert c.admission_level(4) == 2
+
+
+def test_slo_degradation_mixed_levels_isolated(model_params):
+    """Under queue pressure the controller demotes an admission down the
+    precision ladder; a level-0 neighbour co-scheduled with the demoted slot
+    still emits tokens bit-identical to its own single-level run."""
+    from repro.numerics import NumericsContext, PrecisionPolicy
+    from repro.serving import SLOConfig
+    m, params, ctx = model_params
+    lo = NumericsContext(policy=PrecisionPolicy.uniform(
+        EulerConfig(mode="posit", width=8)), backend="lax_ref")
+    hi = NumericsContext(policy=PrecisionPolicy.uniform(
+        EulerConfig(mode="exact")), backend="lax_ref")
+    eng = ServeEngine(m, params, ctx, max_len=64, batch=2,
+                      cache_dtype=jnp.float32, levels=[hi, lo])
+    assert eng.n_levels == 2
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, CFG.vocab, 5) for _ in range(4)]
+    b = RequestBatcher(eng, prompt_buckets=(8,), slo=SLOConfig(queue_hi=3))
+    rids = [b.submit(p, max_new=6) for p in prompts]
+    res = b.run()
+    # first admission saw queue depth 3 -> level 1; the rest level 0
+    assert b.stats["demotions"] == 1
+    # the level-0 request co-scheduled with the demoted one matches its
+    # single-request run on a level-0-only engine
+    eng0 = ServeEngine(m, params, ctx, max_len=64, batch=2,
+                       cache_dtype=jnp.float32, numerics=hi)
+    b0 = RequestBatcher(eng0, prompt_buckets=(8,))
+    r0 = b0.submit(prompts[1], max_new=6)
+    np.testing.assert_array_equal(res[rids[1]], b0.run()[r0])
+    # and the demoted request matches a run on a posit8-primary engine
+    eng1 = ServeEngine(m, params, ctx, max_len=64, batch=2,
+                       cache_dtype=jnp.float32, numerics=lo)
+    b1 = RequestBatcher(eng1, prompt_buckets=(8,))
+    r1 = b1.submit(prompts[0], max_new=6)
+    np.testing.assert_array_equal(res[rids[0]], b1.run()[r1])
+
+
+def test_guard_retry_reenqueues_and_recovers(model_params):
+    """An unrecovered checksum violation (detect-only guard) tears the slot
+    down before the corrupted token reaches the stream; the re-enqueued
+    request decodes clean and finishes bit-identical to a fault-free run."""
+    from repro.numerics import NumericsContext, PrecisionPolicy
+    from repro.numerics.backends import faulty, guarded
+    from repro.reliability.faults import FaultPlan
+    from repro.reliability.guards import GuardConfig
+    m, params, ctx = model_params
+    ecfg = EulerConfig(mode="posit", width=16)
+    gb = guarded(faulty("lax_ref"),
+                 GuardConfig(record="events", sentinels=False,
+                             max_retries=0, atol=0.0))  # detect-only
+    nctx = NumericsContext(policy=PrecisionPolicy.uniform(ecfg),
+                           backend=gb.name)
+    eng = ServeEngine(m, params, ctx, max_len=64, batch=2,
+                      cache_dtype=jnp.float32, numerics=nctx,
+                      fault=FaultPlan(seed=5, rate=0.05, role="regime_run",
+                                      operand="a", end_step=1))
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(0, CFG.vocab, 5) for _ in range(2)]
+    b = RequestBatcher(eng, prompt_buckets=(8,), guard_retry=1)
+    rids = [b.submit(p, max_new=6) for p in prompts]
+    res = b.run()
+    assert b.stats["guard_retries"] >= 1
+    assert [e for e in b.events if e[0] == "guard_retry"]
+    assert all(b.statuses[r] == "ok" for r in rids)
+    # fault-free baseline: same numerics minus the guard/fault wrappers
+    clean = NumericsContext(policy=PrecisionPolicy.uniform(ecfg),
+                            backend="lax_ref")
+    engc = ServeEngine(m, params, ctx, max_len=64, batch=2,
+                       cache_dtype=jnp.float32, numerics=clean)
+    bc = RequestBatcher(engc, prompt_buckets=(8,))
+    rc = [bc.submit(p, max_new=6) for p in prompts]
+    resc = bc.run()
+    for r, c in zip(rids, rc):
+        np.testing.assert_array_equal(res[r], resc[c])
+
+
+def test_guard_retry_exhausted_fails(model_params):
+    """Past the guard_retry bound the request retires with status "failed"
+    instead of looping forever.  The fault plan is persistent (no step
+    window), so the retry attempt trips the guard again and exhausts the
+    single-retry budget."""
+    from repro.numerics import NumericsContext, PrecisionPolicy
+    from repro.numerics.backends import faulty, guarded
+    from repro.reliability.faults import FaultPlan
+    from repro.reliability.guards import GuardConfig
+    m, params, ctx = model_params
+    ecfg = EulerConfig(mode="posit", width=16)
+    gb = guarded(faulty("lax_ref"),
+                 GuardConfig(record="events", sentinels=False,
+                             max_retries=0, atol=0.0))
+    nctx = NumericsContext(policy=PrecisionPolicy.uniform(ecfg),
+                           backend=gb.name)
+    eng = ServeEngine(m, params, ctx, max_len=64, batch=2,
+                      cache_dtype=jnp.float32, numerics=nctx,
+                      fault=FaultPlan(seed=5, rate=0.2, role="regime_run",
+                                      operand="a"))  # persistent: every step
+    rng = np.random.default_rng(32)
+    b = RequestBatcher(eng, prompt_buckets=(8,), guard_retry=1)
+    rid = b.submit(rng.integers(0, CFG.vocab, 5), max_new=6)
+    res = b.run()
+    assert b.stats["guard_retries"] >= 1
+    assert b.statuses[rid] == "failed"
+    assert len(res[rid]) < 6
