@@ -10,7 +10,7 @@ import time
 
 
 SECTIONS = ("table1", "hw", "accuracy", "prototype", "engine", "roofline",
-            "reliability")
+            "reliability", "decode")
 
 
 def _section(name):
@@ -34,6 +34,14 @@ def _section(name):
     elif name == "roofline":
         from benchmarks import roofline
         roofline.main()
+    elif name == "decode":
+        # paged-vs-dense decode A/B at the committed BENCH_decode.json
+        # shape; --out appends an entry (history accumulates, not replaced)
+        from benchmarks import serve_bench
+        serve_bench.main(["--paged", "--backends", "pallas",
+                          "--widths", "16", "--requests", "12",
+                          "--max-new", "16", "--repeats", "2",
+                          "--out", "BENCH_decode.json"])
     elif name == "reliability":
         from repro.core import reliability as R
         from repro.core import posit as P

@@ -42,17 +42,18 @@ from repro import numerics as N
 from repro.core.engine import from_variant
 from repro.models.config import ModelConfig
 from repro.models.transformer import Model
-from repro.serving import GenerationConfig, RequestBatcher, ServeEngine
+from repro.serving import (GenerationConfig, PagedKVConfig, RequestBatcher,
+                           ServeEngine)
 
 
 def _make_batcher(backend: str, cfg: ModelConfig, *, batch, max_len, width,
-                  variant, buckets, seed):
+                  variant, buckets, seed, paged=None, cache_dtype=None):
     nctx = N.NumericsContext.from_ecfg(from_variant(width, variant),
                                        backend=backend)
     model = Model(cfg, remat=False, numerics=nctx)
     params = model.init(jax.random.PRNGKey(seed))
     eng = ServeEngine(model, params, max_len=max_len, batch=batch,
-                      numerics=nctx)
+                      numerics=nctx, paged=paged, cache_dtype=cache_dtype)
     return RequestBatcher(eng, prompt_buckets=buckets)
 
 
@@ -119,6 +120,147 @@ def bench_backend(backend: str, cfg: ModelConfig, *, batch: int,
     return outs[0] if paired_with is None else (outs[0], outs[1])
 
 
+# ---------------------------------------------------------------------------
+# paged-vs-dense decode benchmark (--paged)
+# ---------------------------------------------------------------------------
+
+def _drain_prompts(batcher, gen, prompts, max_new):
+    """Time one queue drain of an explicit prompt list."""
+    for p in prompts:
+        batcher.submit(p, max_new=max_new)
+    lat: dict[int, float] = {}
+    t0 = time.perf_counter()
+    results = batcher.run(gen, on_complete=lambda rid, toks:
+                          lat.__setitem__(rid, time.perf_counter() - t0))
+    return time.perf_counter() - t0, results, lat
+
+
+def _mixed_traffic(cfg, *, requests, max_len, page_size, max_new, seed):
+    """Half short prompts, half long ones capped at max_len/2 — the
+    workload where paging pays: dense charges every slot ``max_len`` of
+    HBM and attends over all of it, while the paged table window tracks
+    the longest LIVE request (here <= max_len/2)."""
+    rng = np.random.default_rng(seed)
+    cap = max_len // 2
+    prompts = []
+    for i in range(requests):
+        if i % 2 == 0:
+            plen = int(rng.integers(4, 2 * page_size + 1))
+        else:
+            plen = int(rng.integers(cap // 2, max(cap // 2 + 1,
+                                                  cap - max_new + 1)))
+        prompts.append(rng.integers(0, cfg.vocab, plen))
+    return prompts
+
+
+def _cache_bytes(eng) -> int:
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(eng.cache)))
+
+
+def _decode_metrics(name, batcher, ps_sorted, walls):
+    wall, results, lat = ps_sorted[len(ps_sorted) // 2]
+    toks = sum(len(v) for v in results.values())
+    ls = np.asarray(sorted(lat.values()))
+    return results, {
+        "cache": name, "tokens": toks, "wall_s": round(wall, 4),
+        "pass_walls_s": [round(w, 4) for w in walls],
+        "tok_per_s": round(toks / wall, 1),
+        "p50_ms": round(float(np.percentile(ls, 50)) * 1e3, 1),
+        "p99_ms": round(float(np.percentile(ls, 99)) * 1e3, 1),
+        "steps": batcher.stats["steps"],
+        "refills": batcher.stats["refills"],
+    }
+
+
+def bench_decode(cfg: ModelConfig, *, backend: str, batch: int, max_len: int,
+                 page_size: int, num_pages: int | None, requests: int,
+                 max_new: int, width: int = 16, variant: str = "L-21b",
+                 cache_dtype=None, seed: int = 0, repeats: int = 1) -> dict:
+    """A/B: dense bucketed KV rows vs the paged pool, same mixed traffic.
+
+    The dense baseline buckets at every page multiple, so both arms pack
+    every prompt identically — which is what makes the emitted tokens
+    comparable bit-for-bit (recorded as ``parity``).  Timed passes are
+    interleaved dense/paged per repeat (same drift-cancelling estimator as
+    the guard benchmark).  HBM per slot: dense is the allocation
+    (``cache bytes / batch`` — every slot owns a full ``max_len`` row);
+    paged is what the pool actually needed at peak
+    (``peak_pages * page_bytes / batch``) — the provisioning floor a
+    right-sized pool can run at, which dense can never go below.
+    """
+    buckets = tuple(range(page_size, max_len, page_size))
+    prompts = _mixed_traffic(cfg, requests=requests, max_len=max_len,
+                             page_size=page_size, max_new=max_new, seed=seed)
+    gen = GenerationConfig(max_new_tokens=max_new)
+    kw = dict(batch=batch, max_len=max_len, width=width, variant=variant,
+              buckets=buckets, seed=seed, cache_dtype=cache_dtype)
+    dense = _make_batcher(backend, cfg, **kw)
+    paged = _make_batcher(backend, cfg, paged=PagedKVConfig(
+        page_size=page_size, num_pages=num_pages), **kw)
+    for b in (dense, paged):  # warm-up: compile off the clock
+        _drain_prompts(b, gen, prompts, max_new)
+    passes = {id(dense): [], id(paged): []}
+    for _ in range(max(1, repeats)):
+        for b in (dense, paged):  # interleaved A/B timed passes
+            passes[id(b)].append(_drain_prompts(b, gen, prompts, max_new))
+    out = {}
+    res = {}
+    for name, b in (("dense", dense), ("paged", paged)):
+        ps = passes[id(b)]
+        walls = [p[0] for p in ps]
+        res[name], out[name] = _decode_metrics(
+            name, b, sorted(ps, key=lambda p: p[0]), walls)
+    kv = paged.engine.kv
+    pool_pages = kv.alloc.num_pages
+    page_bytes = _cache_bytes(paged.engine) // pool_pages
+    out["dense"]["hbm_per_slot_bytes"] = _cache_bytes(dense.engine) // batch
+    out["paged"].update({
+        "hbm_per_slot_bytes": kv.peak_pages * page_bytes // batch,
+        "peak_pages": kv.peak_pages,
+        "pool_pages": pool_pages,
+        "page_occupancy": round(kv.peak_pages / pool_pages, 3),
+        "kv_oom": paged.stats["kv_oom"],
+        "preempts": paged.stats["preempts"],
+    })
+    # each timed pass re-submits the same prompts, so rids keep counting up
+    # across passes; normalize to per-pass submission order before comparing
+    # (the two arms may report different median passes)
+    def _by_order(res):
+        return {r - min(res): toks for r, toks in res.items()}
+
+    nd, np_ = _by_order(res["dense"]), _by_order(res["paged"])
+    parity = (sorted(nd) == sorted(np_) and all(
+        np.array_equal(nd[r], np_[r]) for r in nd))
+    return {
+        "kind": "paged_decode", "backend": backend, "width": width,
+        "cache_dtype": str(np.dtype(cache_dtype).name) if cache_dtype
+                       else "bf16",
+        "batch": batch, "max_len": max_len, "page_size": page_size,
+        "requests": requests, "max_new": max_new, "seed": seed,
+        "repeats": repeats, "model": cfg.name,
+        "dense": out["dense"], "paged": out["paged"],
+        "parity": bool(parity),
+        "speedup": round(out["paged"]["tok_per_s"]
+                         / out["dense"]["tok_per_s"], 3),
+        "hbm_ratio": round(out["paged"]["hbm_per_slot_bytes"]
+                           / out["dense"]["hbm_per_slot_bytes"], 3),
+    }
+
+
+def _append_entry(path: str, entry: dict):
+    """Append-style committed record: BENCH_decode.json accumulates one
+    entry per run instead of overwriting history."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        doc = {"entries": []}
+    doc.setdefault("entries", []).append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backends", default="exact,lax_ref",
@@ -142,14 +284,29 @@ def main(argv=None):
                          "serving profile) and report ABFT clean-path "
                          "overhead vs the unguarded tok/s")
     ap.add_argument("--out", default="",
-                    help="write the grid as JSON (BENCH_serving.json)")
+                    help="write the grid as JSON (BENCH_serving.json); with "
+                         "--paged, APPEND an entry (BENCH_decode.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: exercises admission, masked "
                          "decode and mid-stream refill end-to-end")
+    ap.add_argument("--paged", action="store_true",
+                    help="bench the paged KV cache A/B against the dense "
+                         "bucketed baseline (mixed short/long traffic) "
+                         "instead of the backend grid")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page for --paged")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="pool pages for --paged (0: full-occupancy default)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.requests, args.batch, args.max_new = 6, 2, 8
         args.repeats = 1
+        if args.paged:
+            args.max_len, args.page_size = 64, 8
+    elif args.paged and args.max_len == 64:
+        # mixed short/long traffic needs headroom for "long" to mean
+        # something; the committed BENCH_decode entry uses this shape
+        args.max_len, args.batch = 256, 4
 
     if args.smoke:
         cfg = ModelConfig(name="serve-bench", family="dense", n_layers=2,
@@ -162,6 +319,38 @@ def main(argv=None):
                           d_model=192, n_heads=4, n_kv_heads=2, d_ff=384,
                           vocab=256, loss_chunk=32, q_chunk=32, kv_chunk=32)
     widths = [int(w) for w in args.widths.split(",") if w]
+    if args.paged:
+        backend = args.backends.split(",")[0].strip()
+        entry = bench_decode(
+            cfg, backend=backend, batch=args.batch, max_len=args.max_len,
+            page_size=args.page_size, num_pages=args.num_pages or None,
+            requests=args.requests, max_new=args.max_new, width=widths[0],
+            seed=args.seed, repeats=args.repeats)
+        d, p = entry["dense"], entry["paged"]
+        print(f"# paged decode A/B backend={backend} width={widths[0]} "
+              f"batch={args.batch} max_len={args.max_len} "
+              f"page_size={args.page_size}")
+        print("cache,tokens,tok_per_s,p50_ms,p99_ms,steps,refills,"
+              "hbm_per_slot_bytes")
+        for name, r in (("dense", d), ("paged", p)):
+            print(f"{name},{r['tokens']},{r['tok_per_s']:.1f},"
+                  f"{r['p50_ms']:.0f},{r['p99_ms']:.0f},{r['steps']},"
+                  f"{r['refills']},{r['hbm_per_slot_bytes']}")
+        print(f"parity={entry['parity']} speedup={entry['speedup']:.3f} "
+              f"hbm_ratio={entry['hbm_ratio']:.3f} "
+              f"peak_pages={p['peak_pages']}/{p['pool_pages']} "
+              f"(occupancy {p['page_occupancy']:.3f})")
+        assert entry["parity"], "paged tokens diverged from dense"
+        assert p["hbm_per_slot_bytes"] < d["hbm_per_slot_bytes"], entry
+        if args.smoke:
+            assert d["tokens"] == args.requests * args.max_new, entry
+            assert d["refills"] >= 1, "no mid-stream refill exercised"
+        if args.out:
+            _append_entry(args.out, entry)
+            print(f"appended to {args.out}")
+        if args.smoke:
+            print("serve_bench paged smoke OK")
+        return
     if args.guard:
         # the serving guard profile: event-gated recording, no sentinel
         # encode, and the fast raw-operand check (quant_eps-widened

@@ -267,6 +267,25 @@ def quantize(x, cfg: PositConfig, dtype=jnp.float32):
     return decode_to_float(encode_from_float(x, cfg), cfg, dtype)
 
 
+_STORAGE_WIDTH = {"uint8": 8, "uint16": 16, "uint32": 32}
+
+
+def storage_pc(dtype, preferred: PositConfig | None = None) -> PositConfig | None:
+    """Posit format implied by a storage dtype, honoring a preferred format.
+
+    Returns ``preferred`` when its word width matches the storage width (so a
+    bounded-regime or nonstandard-es policy format is kept end-to-end), else
+    the standard posit of that width; ``None`` for non-integer storage (float
+    caches need no codec).
+    """
+    width = _STORAGE_WIDTH.get(jnp.dtype(dtype).name)
+    if width is None:
+        return None
+    if preferred is not None and preferred.n_bits == width:
+        return preferred
+    return BY_WIDTH[width][0]
+
+
 def to_storage(pat, cfg: PositConfig):
     return pat.astype(cfg.storage_dtype)
 

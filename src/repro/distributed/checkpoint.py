@@ -111,6 +111,21 @@ def latest_step(ckpt_dir: str) -> int | None:
     return int(name.split("_")[1])
 
 
+def read_extra(ckpt_dir: str, step: int | None = None):
+    """Read a checkpoint's ``extra`` metadata without touching the arrays.
+
+    Lets callers validate structural compatibility (e.g. the serving cache
+    layout) BEFORE ``restore`` starts shape-checking leaves.  Returns
+    (extra, step)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        return json.load(f)["extra"], step
+
+
 def restore(ckpt_dir: str, target_tree, *, shardings=None, step: int | None = None,
             verify: bool = True):
     """Restore into the structure of ``target_tree``.

@@ -32,8 +32,9 @@ from repro.launch.train import build_numerics
 from repro.models.layers import Ctx
 from repro.models.transformer import Model
 from repro.numerics import NumericsContext, PrecisionPolicy
-from repro.serving import (DurableBatcher, GenerationConfig, QueueFullError,
-                           RequestBatcher, ServeEngine, SLOConfig)
+from repro.serving import (DurableBatcher, GenerationConfig, PagedKVConfig,
+                           QueueFullError, RequestBatcher, ServeEngine,
+                           SLOConfig)
 
 
 def main(argv=None):
@@ -84,6 +85,16 @@ def main(argv=None):
     ap.add_argument("--slo-p99-ms", type=float, default=0.0,
                     help="step-latency p99 threshold adding one more "
                          "demotion level; 0 disables")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: shared page pool + per-slot page "
+                         "tables instead of per-slot bucketed rows; decode "
+                         "runs the fused flash-decode kernel on TPU")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--max-len must be a multiple)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="physical pages in the pool (0: full occupancy "
+                         "for every slot + headroom); smaller values "
+                         "oversubscribe HBM with OOM backpressure/preempt")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.WARNING)
@@ -120,8 +131,12 @@ def main(argv=None):
             NumericsContext(policy=PrecisionPolicy.uniform(
                 from_variant(w, args.euler)), backend=args.backend)
             for w in widths]
+    paged = (PagedKVConfig(page_size=args.page_size,
+                           num_pages=args.num_pages or None)
+             if args.paged else None)
     eng = ServeEngine(model, params, ctx, max_len=args.max_len,
-                      batch=args.batch, numerics=nctx, levels=levels)
+                      batch=args.batch, numerics=nctx, levels=levels,
+                      paged=paged)
     slo = (SLOConfig(queue_hi=args.slo_queue_hi,
                      p99_ms=args.slo_p99_ms or None)
            if levels else None)
@@ -170,6 +185,12 @@ def main(argv=None):
           f"[{batcher.stats['steps']} steps, {batcher.stats['refills']} "
           f"mid-stream refills]")
     s = batcher.stats
+    if args.paged:
+        kv = eng.kv
+        print(f"  paged: page_size={kv.page_size}, peak "
+              f"{kv.peak_pages}/{kv.alloc.num_pages} pages, "
+              f"{s['kv_oom']} OOM backpressures, {s['preempts']} preempts, "
+              f"{s['rejected']} rejected")
     if s["timeouts"] or s["guard_retries"] or s["demotions"]:
         print(f"  SLO: {s['timeouts']} timeouts, {s['demotions']} admission "
               f"demotions, {s['guard_retries']} guard retries")

@@ -32,19 +32,36 @@ from repro.core.engine import EulerConfig
 from repro.numerics import NumericsContext
 
 
-def cache_encode(x, cache_dtype):
-    """Write-side KV-cache codec: uint8 caches store Posit-(8,0) patterns —
-    the paper's posit memory-compression applied to the KV cache."""
-    if cache_dtype == jnp.uint8:
-        return _P.to_storage(_P.encode_from_float(x, _P.POSIT8), _P.POSIT8)
+def cache_encode(x, cache_dtype, pc=None):
+    """Write-side KV-cache codec: integer caches store posit words — the
+    paper's posit memory-compression applied to the KV cache.
+
+    The format follows the storage width (uint8 -> Posit-(8,0), uint16 ->
+    Posit-(16,1), uint32 -> Posit-(32,2)) unless ``pc`` names the active
+    policy's format of the same width (e.g. a bounded-regime B-Posit), in
+    which case the policy format is kept end-to-end — Fixed-Posit's
+    store-the-words-you-compute-with argument."""
+    pc = _P.storage_pc(cache_dtype, pc)
+    if pc is not None:
+        return _P.to_storage(_P.encode_from_float(x, pc), pc)
     return x.astype(cache_dtype)
 
 
-def cache_decode(x, out_dtype=jnp.bfloat16):
-    if x.dtype == jnp.uint8:
-        return _P.decode_to_float(_P.from_storage(x, _P.POSIT8), _P.POSIT8,
-                                  out_dtype)
+def cache_decode(x, out_dtype=jnp.bfloat16, pc=None):
+    pc = _P.storage_pc(x.dtype, pc)
+    if pc is not None:
+        return _P.decode_to_float(_P.from_storage(x, pc), pc, out_dtype)
     return x
+
+
+def cache_policy_pc(ctx, cache_dtype):
+    """The posit format a KV cache of ``cache_dtype`` stores under the
+    active policy: the attention qk operand format when its width matches
+    the storage width, else the standard posit of that width; ``None`` for
+    float caches.  Resolved at trace time under the ``attn`` scope."""
+    cfg_qk = N.resolve("qk", ctx=ctx.numerics)
+    pref = cfg_qk.posit if cfg_qk.mode != "exact" else None
+    return _P.storage_pc(cache_dtype, pref)
 
 
 @dataclasses.dataclass
@@ -56,6 +73,10 @@ class Ctx:
     model_axis: str = "model"
     decode_pos: Any = None           # decode position: scalar (lockstep
                                      # batch) or [B] per-slot vector
+    page_table: Any = None           # [B, n_logical] int32 physical page ids
+                                     # — presence selects paged decode
+    decode_write: Any = None         # [B] bool write mask for paged decode
+                                     # (False rows write the trash page)
     deterministic: bool = True
     moe_fsdp: bool = False           # expert weights 2D-sharded (model, data)
     attn_head_shard: bool = False    # shard q/k/v heads over model in
@@ -242,6 +263,38 @@ def attention_apply(p, x, ctx: Ctx, cfg, window, positions,
             k = ctx.shard(k, ctx.data_axes, None, ctx.model_axis, None)
             v = ctx.shard(v, ctx.data_axes, None, ctx.model_axis, None)
 
+    if cache is not None and T == 1 and ctx.page_table is not None:
+        # ---- paged decode ----
+        # The cache is the shared page pool [P, page_size, KV, hd]; this
+        # slot's token goes to the physical page its page table names for
+        # the current logical page.  Masked rows (retired slots) and rows
+        # whose table entry is unallocated redirect to the TRASH_PAGE
+        # write sink, so the store stays a plain scatter.  Attention then
+        # dispatches whole through the numerics registry (gather +
+        # softmax + qk/pv), where the pallas backend may run the fused
+        # flash-decode kernel.
+        from repro.kernels.paged_decode import NULL_PAGE, TRASH_PAGE
+        kp, vp = cache["k"], cache["v"]
+        pc = cache_policy_pc(ctx, kp.dtype)
+        pos = jnp.asarray(ctx.decode_pos, jnp.int32)
+        pos_b = jnp.full((B,), pos) if pos.ndim == 0 else pos  # [B]
+        ps_ = kp.shape[1]
+        nlp = ctx.page_table.shape[1]
+        lp = jnp.clip(pos_b // ps_, 0, nlp - 1)
+        off = pos_b % ps_
+        phys = jnp.take_along_axis(ctx.page_table, lp[:, None], 1)[:, 0]
+        phys = jnp.where(phys == NULL_PAGE, TRASH_PAGE, phys)
+        if ctx.decode_write is not None:
+            phys = jnp.where(jnp.asarray(ctx.decode_write, bool),
+                             phys, TRASH_PAGE)
+        kp = kp.at[phys, off].set(cache_encode(k[:, 0], kp.dtype, pc))
+        vp = vp.at[phys, off].set(cache_encode(v[:, 0], vp.dtype, pc))
+        out = N.decode_attention(q, kp, vp, ctx.page_table, pos_b,
+                                 ctx.numerics, pc=pc,
+                                 softcap=cfg.attn_softcap, window=window)
+        y = dense_apply(p["wo"], out.astype(x.dtype), ctx)
+        return y, {"k": kp, "v": vp}
+
     if cache is not None and T == 1:
         # ---- decode ----
         # ``ctx.decode_pos`` is a scalar (whole batch at one position) or a
@@ -249,18 +302,19 @@ def attention_apply(p, x, ctx: Ctx, cfg, window, positions,
         # Both are normalized to per-row positions so cache writes and
         # validity masks are per-slot.
         ck, cv = cache["k"], cache["v"]
+        pc = cache_policy_pc(ctx, ck.dtype)
         pos = jnp.asarray(ctx.decode_pos, jnp.int32)
         pos_b = jnp.full((B,), pos) if pos.ndim == 0 else pos  # [B]
 
         def _row_write(c, u, p_row):
             return jax.lax.dynamic_update_slice(c, u, (p_row, 0, 0))
 
-        ck = jax.vmap(_row_write)(ck, cache_encode(k, ck.dtype), pos_b)
-        cv = jax.vmap(_row_write)(cv, cache_encode(v, cv.dtype), pos_b)
+        ck = jax.vmap(_row_write)(ck, cache_encode(k, ck.dtype, pc), pos_b)
+        cv = jax.vmap(_row_write)(cv, cache_encode(v, cv.dtype, pc), pos_b)
         S = ck.shape[1]
         s_pos = jnp.arange(S)
-        kd = cache_decode(ck, x.dtype)
-        vd = cache_decode(cv, x.dtype)
+        kd = cache_decode(ck, x.dtype, pc)
+        vd = cache_decode(cv, x.dtype, pc)
         scores = _attn_scores(q, kd, ctx, cfg.attn_softcap)  # [B,KV,1,g,S]
         valid = s_pos[None, :] <= pos_b[:, None]             # [B, S]
         if window is not None:
@@ -273,9 +327,15 @@ def attention_apply(p, x, ctx: Ctx, cfg, window, positions,
         return y, {"k": ck, "v": cv}
 
     # ---- train / prefill: chunked (flash-style) causal attention ----
+    # chunk sizes must divide T; paged admission pads prompts to arbitrary
+    # page multiples, so fall back to the largest divisor <= the configured
+    # chunk (identical to min(chunk, T) whenever that already divides T)
     qc = min(q_chunk, T)
+    while T % qc:
+        qc -= 1
     kc = min(kv_chunk, T)
-    assert T % qc == 0 and T % kc == 0
+    while T % kc:
+        kc -= 1
     n_q, n_k = T // qc, T // kc
     group = H // KV
 
@@ -320,10 +380,11 @@ def attention_apply(p, x, ctx: Ctx, cfg, window, positions,
 
     new_cache = None
     if cache is not None:  # prefill: write the K/V slab at offset 0
+        pc = cache_policy_pc(ctx, cache["k"].dtype)
         ck = jax.lax.dynamic_update_slice(
-            cache["k"], cache_encode(k, cache["k"].dtype), (0, 0, 0, 0))
+            cache["k"], cache_encode(k, cache["k"].dtype, pc), (0, 0, 0, 0))
         cv = jax.lax.dynamic_update_slice(
-            cache["v"], cache_encode(v, cache["v"].dtype), (0, 0, 0, 0))
+            cache["v"], cache_encode(v, cache["v"].dtype, pc), (0, 0, 0, 0))
         new_cache = {"k": ck, "v": cv}
     return y, new_cache
 

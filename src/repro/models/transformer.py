@@ -349,6 +349,25 @@ class Model:
             return stack(c)
         return stack(L.attention_cache_init(cfg, batch, max_len, dtype))
 
+    def init_paged_cache(self, num_pages: int, page_size: int, dtype=None):
+        """Shared page pool: ``{"k","v"}`` of ``[L, P, page_size, KV, hd]``.
+
+        Replaces the per-slot ``[L, B, max_len, ...]`` dense cache for
+        serving decode: slots address the pool through page tables
+        (``serving/kvcache.py``), so HBM scales with live tokens, not
+        ``batch * max_len``.  Pages 0/1 are reserved (null read page /
+        trash write sink) and must stay zero.  Attention-only layout —
+        SSM/hybrid recurrent state has no sequence axis to page."""
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"paged KV cache requires attention caches; family "
+                f"{cfg.family!r} holds recurrent state")
+        dtype = dtype or jnp.dtype(cfg.cache_dtype)
+        shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads,
+                 cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
     def reset_cache(self, cache, slot=None):
         """Explicit cache lifecycle for serving.
 
@@ -366,12 +385,17 @@ class Model:
         logits = self.head(params, hidden[:, -1:, :], ctx)[:, 0, :]
         return logits, cache
 
-    def decode_step(self, params, tok, pos, cache, ctx: Ctx):
+    def decode_step(self, params, tok, pos, cache, ctx: Ctx, *,
+                    page_table=None, write_mask=None):
         """One decode step.  tok: [B] int32; pos: traced scalar position
         (lockstep batch) or [B] int32 vector (per-slot positions, used by
-        the continuous-batching scheduler).  Returns (logits [B, Vp],
-        new cache)."""
-        ctx = dataclasses.replace(ctx, decode_pos=pos)
+        the continuous-batching scheduler).  With ``page_table``
+        ([B, n_logical] int32), ``cache`` is the shared page pool and
+        attention runs the paged decode path; ``write_mask`` ([B] bool)
+        redirects masked rows' cache writes to the trash page.  Returns
+        (logits [B, Vp], new cache)."""
+        ctx = dataclasses.replace(ctx, decode_pos=pos, page_table=page_table,
+                                  decode_write=write_mask)
         hidden, cache, _ = self.forward(params, tok[:, None], ctx, cache=cache)
         logits = self.head(params, hidden[:, 0, :], ctx)
         return logits, cache

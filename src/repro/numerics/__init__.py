@@ -20,9 +20,9 @@ from .backends import (Backend, ExactBackend, FaultyBackend, GuardedBackend,
                        LaxRefBackend, PallasBackend, available_backends,
                        faulty, get_backend, guarded, register_backend)
 from .api import (DEFAULT, NumericsContext, current, current_path,
-                  dot_general, drain_guard_events, elementwise, guard_stats,
-                  guard_totals, matmul, pv, qk, reset_guard_stats, resolve,
-                  scope, scoped, use)
+                  decode_attention, dot_general, drain_guard_events,
+                  elementwise, guard_stats, guard_totals, matmul, pv, qk,
+                  reset_guard_stats, resolve, scope, scoped, use)
 
 __all__ = [
     "OP_KINDS", "PolicyRule", "PrecisionPolicy", "ecfg_from_dict",
@@ -30,8 +30,8 @@ __all__ = [
     "Backend", "ExactBackend", "FaultyBackend", "GuardedBackend",
     "LaxRefBackend", "PallasBackend", "available_backends", "faulty",
     "get_backend", "guarded", "register_backend",
-    "DEFAULT", "NumericsContext", "current", "current_path", "dot_general",
-    "drain_guard_events", "elementwise", "guard_stats", "guard_totals",
-    "matmul", "pv", "qk", "reset_guard_stats", "resolve", "scope", "scoped",
-    "use",
+    "DEFAULT", "NumericsContext", "current", "current_path",
+    "decode_attention", "dot_general", "drain_guard_events", "elementwise",
+    "guard_stats", "guard_totals", "matmul", "pv", "qk", "reset_guard_stats",
+    "resolve", "scope", "scoped", "use",
 ]

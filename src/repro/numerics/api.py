@@ -239,3 +239,25 @@ def elementwise(a, b, ctx: NumericsContext | None = None, *,
     """Elementwise EULER product (SSD state-update path)."""
     backend, cfg = _dispatch("elementwise", ctx, path)
     return backend.elementwise(a, b, cfg)
+
+
+def decode_attention(q, k_pages, v_pages, page_table, pos,
+                     ctx: NumericsContext | None = None, *, pc=None,
+                     softcap=None, window=None, path: str | None = None):
+    """Paged decode attention over posit-word KV pages.
+
+    q ``[B, 1, H, hd]``; k_pages/v_pages ``[P, page_size, KV, hd]`` posit
+    storage words (format ``pc``; float pages pass ``pc=None``);
+    page_table ``[B, n_logical]`` int32; pos ``[B]`` int32 decode
+    positions.  Dispatches whole (the backend owns gather + softmax + both
+    contractions, so the pallas backend can run the fused flash-decode
+    kernel); reference backends re-dispatch the inner qk/pv through the
+    policy, composing with ``faulty:``/``guarded:`` exactly like the
+    dense decode path.
+    """
+    nctx = ctx if ctx is not None else current()
+    p = path if path is not None else current_path()
+    _TLS.last_dispatch = ("decode_attention", p)
+    return get_backend(nctx.backend).decode_attention(
+        q, k_pages, v_pages, page_table, pos, nctx, p,
+        pc=pc, softcap=softcap, window=window)

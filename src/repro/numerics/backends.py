@@ -66,6 +66,27 @@ class Backend:
         dn = (((nd - 1,), (nd - 2,)), (batch, batch))
         return self.dot_general(p, v, dn, cfg)
 
+    def decode_attention(self, q, k_pages, v_pages, page_table, pos,
+                         nctx, path, *, pc=None, softcap=None, window=None):
+        """Paged decode attention: gather-then-attend reference.
+
+        Unlike the rest of the op set this receives the full (nctx, path)
+        pair: the inner qk/pv contractions re-dispatch through the op
+        layer, so policy resolution and wrapper composition
+        (``faulty:``/``guarded:``) behave exactly as the dense decode
+        path's ``N.dot_general`` calls would — which is what keeps paged
+        decode bit-identical to dense under every backend stack.
+        """
+        from repro.kernels import paged_decode as _PD
+        from . import api as _api
+
+        def dot_fn(a, b, dn, op):
+            return _api.dot_general(a, b, dn, nctx, op=op, path=path)
+
+        return _PD.paged_attention_reference(
+            q, k_pages, v_pages, page_table, pos, pc=pc, softcap=softcap,
+            window=window, dot_fn=dot_fn)
+
 
 class ExactBackend(Backend):
     """FP32 reference: every op runs exact regardless of the config."""
@@ -156,6 +177,28 @@ class PallasBackend(LaxRefBackend):
         if cfg.out_quant:
             out = _P.quantize(out, cfg.posit)
         return out.reshape(lhs_free + rhs_free).astype(cfg.dtype)
+
+    def decode_attention(self, q, k_pages, v_pages, page_table, pos,
+                         nctx, path, *, pc=None, softcap=None, window=None):
+        from repro.kernels import ops as _K
+        cfg_qk = nctx.cfg_for(path, "qk")
+        cfg_pv = nctx.cfg_for(path, "pv")
+        interp = (self.interpret if self.interpret is not None
+                  else _K._default_interpret())
+        if (interp or pc is None or cfg_qk.mode != "euler"
+                or cfg_pv.mode != "euler"
+                or not jnp.issubdtype(jnp.dtype(k_pages.dtype), jnp.integer)):
+            # Off-TPU (interpret mode) the gather-reference IS the fast
+            # path — it attends only the allocated pages, where dense
+            # attends the full max_len cache every step.  The fused kernel
+            # is the HBM-bound TPU path for integer posit-word pages.
+            return super().decode_attention(
+                q, k_pages, v_pages, page_table, pos, nctx, path,
+                pc=pc, softcap=softcap, window=window)
+        from repro.kernels import paged_decode as _PD
+        return _PD.paged_flash_decode(
+            q, k_pages, v_pages, page_table, pos, window, pc=pc,
+            cfg_qk=cfg_qk, cfg_pv=cfg_pv, softcap=softcap, interpret=False)
 
 
 class FaultyBackend(Backend):

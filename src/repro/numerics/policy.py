@@ -26,7 +26,8 @@ import functools
 
 from repro.core.engine import EulerConfig, from_variant
 
-OP_KINDS = ("dot_general", "matmul", "qk", "pv", "elementwise")
+OP_KINDS = ("dot_general", "matmul", "qk", "pv", "elementwise",
+            "decode_attention")
 
 
 # --------------------------------------------------------------------------

@@ -2,8 +2,11 @@ from .engine import (DegradeController, GenerationConfig,
                      QueueFullError, Request, RequestBatcher, ServeEngine,
                      SLOConfig)
 from .failover import DurableBatcher, ServeSupervisor, SimulatedCrash
+from .kvcache import (PageAllocator, PagedKVCache, PagedKVConfig,
+                      PagePoolOOM)
 
 __all__ = ["ServeEngine", "GenerationConfig", "RequestBatcher", "Request",
            "SLOConfig", "DegradeController",
            "QueueFullError", "DurableBatcher", "ServeSupervisor",
-           "SimulatedCrash"]
+           "SimulatedCrash",
+           "PagedKVConfig", "PagedKVCache", "PageAllocator", "PagePoolOOM"]

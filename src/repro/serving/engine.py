@@ -28,6 +28,20 @@ Prompts are bucketed per *request* (not per batch group), so a request's
 tokens are independent of whichever other requests it was co-scheduled
 with; a prompt longer than the largest bucket is truncated to its last
 ``bucket`` tokens with a logged warning (never a negative-offset slice).
+Prompts longer than the engine's ``max_len`` are never truncated: they are
+rejected at admission with terminal status ``"rejected"``.
+
+**Paged mode** (``ServeEngine(..., paged=PagedKVConfig(...))``) replaces
+the per-slot bucketed cache rows with a shared page pool
+(``serving.kvcache``): prefill allocates ``ceil(len/page_size)`` pages,
+decode grows one page at a time as a slot crosses page boundaries, and
+retire returns the pages to the pool at the next refill.  Cache HBM then
+scales with what requests actually use instead of ``batch * max_len``,
+and a prompt of any length up to ``max_len`` is admitted unbucketed.
+Pool exhaustion surfaces as ``PagePoolOOM``: the batcher reclaims retired
+slots' deferred pages, then preempts the youngest-admitted slot (its
+request re-enqueues at the queue front and recomputes from scratch), and
+finally holds admission (queue backpressure).
 """
 from __future__ import annotations
 
@@ -44,6 +58,7 @@ from repro.models.layers import Ctx
 from repro.numerics import NumericsContext
 from repro.reliability.faults import FaultPlan
 from repro.reliability import faults as _faults
+from repro.serving.kvcache import PagePoolOOM, PagedKVCache, PagedKVConfig
 
 log = logging.getLogger("repro.serving")
 
@@ -74,7 +89,8 @@ class ServeEngine:
                  decode_chunk: int = 8,
                  numerics: NumericsContext | None = None,
                  fault: FaultPlan | None = None,
-                 levels: "Sequence[NumericsContext] | None" = None):
+                 levels: "Sequence[NumericsContext] | None" = None,
+                 paged: PagedKVConfig | None = None):
         """``numerics`` (policy + backend) overrides whatever the ctx
         carries — the serving-time precision/backend switch.  With no ctx at
         all, one is derived from the model's own numerics.
@@ -98,7 +114,15 @@ class ServeEngine:
         decode step runs one masked scan per *occupied* level and merges
         caches/tokens per slot, so a slot's stream only ever sees its own
         level's numerics.  With one level (or none given) the decode path is
-        byte-for-byte the single-context path."""
+        byte-for-byte the single-context path.
+
+        ``paged``: switch the KV cache to the paged pool layout
+        (``serving.kvcache``).  The engine then owns a ``PagedKVCache``
+        (``self.kv``), the cache pytree holds the shared per-layer page
+        pools instead of per-slot rows, and decode runs through the
+        ``decode_attention`` numerics op (the fused flash-decode Pallas
+        kernel on TPU).  ``generate`` is unavailable in paged mode — serve
+        through ``RequestBatcher``.  Dense-family models only."""
         if levels:
             numerics = levels[0]
         if ctx is None:
@@ -113,10 +137,41 @@ class ServeEngine:
         self.max_len = max_len
         self.batch = batch
         self.decode_chunk = max(1, decode_chunk)
-        self.cache = model.init_cache(batch, max_len, cache_dtype)
-        # zero batch-1 cache template for slot prefills (never mutated:
-        # prefill is functional, so this stays all-zeros)
-        self._cache1 = model.init_cache(1, max_len, cache_dtype)
+        self.paged = paged
+        self._cache_dtype = cache_dtype
+        if paged is not None:
+            if max_len % paged.page_size:
+                raise ValueError(
+                    f"max_len={max_len} not a multiple of "
+                    f"page_size={paged.page_size}")
+            num_pages = paged.resolve_pages(batch, max_len)
+            self.kv = PagedKVCache(batch, max_len, paged.page_size, num_pages)
+            self.cache = model.init_paged_cache(num_pages, paged.page_size,
+                                                cache_dtype)
+            self._cache1 = None
+            # zero batch-1 dense templates for paged prefills, one per
+            # page-padded prompt length (never mutated: prefill is
+            # functional, so these stay all-zeros)
+            self._ptmpl: dict[int, Any] = {}
+            # scatter a batch-1 prefill slab into the slot's physical pages
+            self._scatter_fn = jax.jit(
+                lambda c, c1, pages: jax.tree.map(
+                    lambda pool, slab: pool.at[:, pages].set(
+                        slab[:, 0].reshape(
+                            (slab.shape[0], pages.shape[0], -1)
+                            + slab.shape[3:]).astype(pool.dtype)),
+                    c, c1))
+            # growth pages must be zeroed: a reused page carries the previous
+            # tenant's words, and per-tensor pre_scale sees gathered garbage
+            self._zero_page_fn = jax.jit(
+                lambda c, p: jax.tree.map(lambda pool: pool.at[:, p].set(0),
+                                          c))
+        else:
+            self.kv = None
+            self.cache = model.init_cache(batch, max_len, cache_dtype)
+            # zero batch-1 cache template for slot prefills (never mutated:
+            # prefill is functional, so this stays all-zeros)
+            self._cache1 = model.init_cache(1, max_len, cache_dtype)
         # the precision ladder: _ctxs[0] is the primary ctx; every further
         # level reuses it with only the numerics (and its default ecfg)
         # swapped, so model wiring is identical across levels
@@ -144,11 +199,45 @@ class ServeEngine:
 
     def reset_all(self):
         """Invalidate every slot (used at the top of every generate/run)."""
+        if self.kv is not None:
+            self.kv.reset()
+            self.cache = jax.tree.map(jnp.zeros_like, self.cache)
+            return
         self.cache = self._reset(self.cache)
 
     def reset_slot(self, slot: int):
         """Invalidate one slot (used when the scheduler retires a request)."""
+        if self.kv is not None:
+            self.kv.free_slot(slot)  # pool rows are overwritten on reuse
+            return
         self.cache = self._reset_slot(self.cache, jnp.int32(slot))
+
+    def release_slot(self, slot: int):
+        """Return a slot's pages to the pool (dense engines: no-op).
+
+        The batcher calls this on preemption/reclaim; ordinary retires keep
+        the pages mapped until the refilling prefill frees them, so retired
+        slots' masked decode writes keep landing at their frozen position —
+        byte-identical to the dense engine's behavior (a per-tensor
+        ``pre_scale`` couples slots, so euler-mode bit-parity with dense
+        needs even retired rows' cache bytes to match)."""
+        if self.kv is not None and self.kv.n_pages(slot):
+            self.kv.free_slot(slot)
+
+    def ensure_slot_pages(self, slot: int, pos) -> list:
+        """Grow ``slot`` until its pages cover a cache write at ``pos``.
+
+        Every grown page is zeroed before it becomes gatherable.  Raises
+        :class:`PagePoolOOM` mid-growth with all already-grown pages mapped
+        and zeroed (consistent state — the batcher preempts and retries).
+        Returns the newly-grown physical pages."""
+        need = min(int(pos), self.max_len - 1) // self.kv.page_size + 1
+        grown = []
+        while self.kv.n_pages(slot) < need:
+            p = self.kv.grow_slot(slot)
+            self.cache = self._zero_page_fn(self.cache, jnp.int32(p))
+            grown.append(p)
+        return grown
 
     # -- jitted decode programs -----------------------------------------
 
@@ -171,20 +260,31 @@ class ServeEngine:
         eos = gen.eos_id
         maxpos = self.max_len - 1
         model, ctx, fault = self.model, self._ctxs[level], self.fault
+        paged = self.kv is not None
 
-        def run(params, tok, pos, done, cache, key, fstep):
+        def step_kwargs(*a):
+            # paged scans thread (page_table, write_mask) through the model;
+            # the mask is all-True on the single-level path so masked (done)
+            # rows still write their pad-token k/v at their frozen position,
+            # exactly like the dense cache does — per-tensor pre_scale makes
+            # that byte-level detail observable.
+            return ({"page_table": a[0], "write_mask": a[1]} if paged
+                    else {})
+
+        def run(params, tok, pos, done, cache, key, fstep, *paged_args):
             def body(carry, _):
                 tok, pos, done, cache, key, fstep = carry
                 key, sub = jax.random.split(key)
+                kw = step_kwargs(*paged_args)
                 if fault is not None:
                     fkey = jax.random.fold_in(
                         jax.random.PRNGKey(fault.seed), fstep)
                     with _faults.inject(fault, fkey, fstep):
                         logits, cache = model.decode_step(
-                            params, tok, pos, cache, ctx)
+                            params, tok, pos, cache, ctx, **kw)
                 else:
                     logits, cache = model.decode_step(params, tok, pos,
-                                                      cache, ctx)
+                                                      cache, ctx, **kw)
                 nxt = _sample(logits, gen, sub)
                 nxt = jnp.where(done, pad, nxt)
                 pos = jnp.where(done, pos, jnp.minimum(pos + 1, maxpos))
@@ -209,6 +309,10 @@ class ServeEngine:
         stops at (and including) its first EOS and emits ``gen.pad_id``
         afterwards; the decode loop early-exits once every row is done (the
         output is still padded to the full [B, max_new_tokens] shape)."""
+        if self.kv is not None:
+            raise RuntimeError(
+                "generate() is whole-batch/bucketed; a paged engine serves "
+                "through RequestBatcher (prefill_slot/step_slots)")
         B, Tp = prompts.shape
         assert B == self.batch
         if gen.max_new_tokens <= 0:
@@ -252,8 +356,33 @@ class ServeEngine:
         FULL overwrite of every cache leaf's slot row (KV slabs, SSM state,
         conv tail), i.e. it subsumes ``reset_slot`` — that is what makes
         stale-state leaks into a refilled slot impossible.  ``level`` picks
-        the precision-ladder context the request was admitted at."""
+        the precision-ladder context the request was admitted at.
+
+        Paged engines prefill into a zero length-``len(prompt_tokens)``
+        dense template (the length must be a page multiple — the batcher
+        pads to one) and scatter the resulting slab into freshly-allocated
+        pool pages; the previous tenant's deferred pages are freed first.
+        Raises :class:`PagePoolOOM` (slot left unmapped, pool state clean)
+        when the pool cannot hold the request plus one growth page."""
         toks = jnp.asarray(prompt_tokens, jnp.int32)[None, :]
+        if self.kv is not None:
+            ps = self.kv.page_size
+            Tpad = toks.shape[1]
+            if Tpad % ps or Tpad > self.max_len:
+                raise ValueError(
+                    f"paged prefill length {Tpad} must be a multiple of "
+                    f"page_size={ps} and <= max_len={self.max_len}")
+            if self.kv.n_pages(slot):
+                self.kv.free_slot(slot)
+            pages = self.kv.alloc_slot(slot, Tpad // ps)
+            tmpl = self._ptmpl.get(Tpad)
+            if tmpl is None:
+                tmpl = self.model.init_cache(1, Tpad, self._cache_dtype)
+                self._ptmpl[Tpad] = tmpl
+            logits, c1 = self._prefill_fns[level](self.params, toks, tmpl)
+            self.cache = self._scatter_fn(self.cache, c1,
+                                          jnp.asarray(pages, jnp.int32))
+            return int(_sample(logits, gen, key)[0])
         logits, c1 = self._prefill_fns[level](self.params, toks, self._cache1)
         self.cache = self._write_slot_fn(self.cache, c1, jnp.int32(slot))
         return int(_sample(logits, gen, key)[0])
@@ -262,6 +391,18 @@ class ServeEngine:
     def _slot_mask(m, leaf):
         """Broadcast a [B] slot mask over a cache leaf (slot axis = 1)."""
         return m.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+
+    def _table_cap(self) -> int:
+        """Logical-page window for this step's device table: the max mapped
+        page count over all slots, rounded up to a power of two (so jit
+        retraces O(log n_logical) table widths, not one per length), capped
+        at ``n_logical``."""
+        n = max(max((self.kv.n_pages(s) for s in range(self.batch)),
+                    default=1), 1)
+        cap = 1
+        while cap < n:
+            cap *= 2
+        return min(cap, self.kv.n_logical)
 
     def step_slots(self, gen: GenerationConfig, tok, pos, active, key,
                    level=None):
@@ -287,6 +428,38 @@ class ServeEngine:
                 else np.asarray(level, np.int32))
         used = sorted({int(l) for l, a in zip(lvls, act) if a}) or [0]
         fstep = jnp.int32(self.fault_step)
+        if self.kv is not None:
+            table = self.kv.table_device()[:, :self._table_cap()]
+            if len(used) == 1:
+                # all rows write (mask all-True): done rows land their
+                # pad-token k/v at their frozen position like dense does
+                scan = self._decode_scan(gen, 1, used[0])
+                wmask = jnp.ones(act.shape, bool)
+                (_, _, _, cache, key, _), toks = scan(
+                    self.params, tok, pos, jnp.asarray(~act), self.cache,
+                    key, fstep, table, wmask)
+                self.cache = cache
+                self.fault_step += 1
+                return np.asarray(toks[0]), key
+            # mixed ladder levels: the pool has no slot axis to where-merge
+            # over, so levels thread SEQUENTIALLY through it.  Disjointness
+            # comes from the write mask: each level's scan writes only its
+            # own slots' pages (other rows are redirected to the trash
+            # page), so no slot's cache bytes are ever produced by another
+            # level's numerics.
+            cache, out = self.cache, None
+            for lvl in used:
+                sel = act & (lvls == lvl)
+                scan = self._decode_scan(gen, 1, lvl)
+                m = jnp.asarray(sel)
+                (_, _, _, cache, key, _), toks = scan(
+                    self.params, tok, pos, jnp.asarray(~sel), cache, key,
+                    fstep, table, m)
+                t = toks[0]
+                out = t if out is None else jnp.where(m, t, out)
+            self.cache = cache
+            self.fault_step += 1
+            return np.asarray(out), key
         if len(used) == 1:
             scan = self._decode_scan(gen, 1, used[0])
             (_, _, _, cache, key, _), toks = scan(
@@ -324,7 +497,7 @@ class Request:
     submit_t: float = 0.0             # batcher-clock timestamp of submit()
     level: int = 0                    # precision-ladder index (0 = highest)
     attempts: int = 0                 # guard-triggered re-enqueues so far
-    status: str = "ok"                # ok | timeout | failed
+    status: str = "ok"                # ok | timeout | failed | rejected
 
 
 class QueueFullError(RuntimeError):
@@ -386,6 +559,7 @@ class _Slot:
     """Host-side per-slot scheduler state (device holds tok/pos vectors)."""
     req: Request
     budget: int          # tokens still allowed (per-request max_new cap)
+    seq: int = 0         # admission order — preemption evicts the youngest
 
 
 @dataclasses.dataclass
@@ -409,7 +583,8 @@ class _RunState:
 
 
 _FRESH_STATS = {"steps": 0, "refills": 0, "truncated": 0, "timeouts": 0,
-                "guard_retries": 0, "demotions": 0}
+                "guard_retries": 0, "demotions": 0, "rejected": 0,
+                "kv_oom": 0, "preempts": 0}
 
 
 class RequestBatcher:
@@ -437,17 +612,22 @@ class RequestBatcher:
         "failed".  ``clock``: injectable monotonic-seconds source for
         deadlines/latency (tests pin it; defaults to ``time.monotonic``)."""
         self.engine = engine
-        buckets = sorted(b for b in prompt_buckets if b < engine.max_len)
-        if not buckets:
-            raise ValueError(
-                f"no prompt bucket fits engine max_len={engine.max_len} "
-                f"(got {tuple(prompt_buckets)}); buckets must leave room "
-                f"for at least one generated token")
-        if len(buckets) < len(set(prompt_buckets)):
-            log.warning("dropping prompt buckets >= max_len=%d: %s",
-                        engine.max_len,
-                        sorted(set(prompt_buckets) - set(buckets)))
-        self.buckets = buckets
+        if engine.kv is not None:
+            # paged admission pads each prompt to its own page multiple —
+            # no buckets, no truncation (over-max_len prompts are rejected)
+            self.buckets = None
+        else:
+            buckets = sorted(b for b in prompt_buckets if b < engine.max_len)
+            if not buckets:
+                raise ValueError(
+                    f"no prompt bucket fits engine max_len={engine.max_len} "
+                    f"(got {tuple(prompt_buckets)}); buckets must leave room "
+                    f"for at least one generated token")
+            if len(buckets) < len(set(prompt_buckets)):
+                log.warning("dropping prompt buckets >= max_len=%d: %s",
+                            engine.max_len,
+                            sorted(set(prompt_buckets) - set(buckets)))
+            self.buckets = buckets
         self.max_queue = max_queue
         self.clock = clock if clock is not None else time.monotonic
         self.slo = slo
@@ -456,6 +636,7 @@ class RequestBatcher:
                            if slo is not None else None)
         self.queue: list[Request] = []
         self._next_rid = 0
+        self._admit_seq = 0  # monotone admission counter (preemption order)
         # ("admit"|"refill"|"done"|"timeout"|"guard_retry", rid, slot, step)
         self.events: list[tuple] = []
         self.stats = dict(_FRESH_STATS)
@@ -490,8 +671,16 @@ class RequestBatcher:
     def _pack(self, r: Request) -> np.ndarray:
         """Right-align the prompt in its own bucket; over-long prompts keep
         their LAST ``bucket`` tokens (recency wins for generation) with a
-        logged warning — never a negative-offset slice."""
-        bucket = self._bucket(len(r.prompt))
+        logged warning — never a negative-offset slice.
+
+        Paged engines bucket to the prompt's own page multiple instead;
+        the admission-time max_len rejection guarantees the prompt fits, so
+        the truncation path is dense-only."""
+        if self.buckets is None:
+            ps = self.engine.kv.page_size
+            bucket = max(ps, -(-len(r.prompt) // ps) * ps)
+        else:
+            bucket = self._bucket(len(r.prompt))
         prompt = r.prompt
         if len(prompt) > bucket:
             log.warning(
@@ -627,6 +816,74 @@ class RequestBatcher:
             st.active[s] = False
             self.queue.insert(0, r)
 
+    # -- paged-pool pressure handling -----------------------------------
+
+    def _reclaim_retired(self, st: _RunState) -> bool:
+        """Free the deferred pages of retired (empty) slots.
+
+        Retired slots keep their pages mapped for dense-write parity (see
+        ``ServeEngine.release_slot``); under pool pressure that luxury goes
+        first.  Returns True if anything was freed."""
+        eng = self.engine
+        freed = False
+        for s in range(eng.batch):
+            if st.slots[s] is None and eng.kv.n_pages(s):
+                eng.kv.free_slot(s)
+                freed = True
+        return freed
+
+    def _preempt_for(self, st: _RunState, grower: int, on_complete) -> bool:
+        """Evict the youngest-admitted active slot (≠ ``grower``) so the
+        grower can take a page.  The victim's request restarts from scratch
+        at the queue front — greedy decoding recomputes the same tokens, so
+        preemption costs latency, never correctness."""
+        eng = self.engine
+        victim, vseq = None, -1
+        for s in range(eng.batch):
+            if s != grower and st.slots[s] is not None \
+                    and st.slots[s].seq > vseq:
+                victim, vseq = s, st.slots[s].seq
+        if victim is None:
+            return False
+        r = st.slots[victim].req
+        r.out = []
+        self.queue.insert(0, r)
+        self.events.append(("preempt", r.rid, victim, st.step))
+        self.stats["preempts"] += 1
+        st.slots[victim] = None
+        st.active[victim] = False
+        eng.release_slot(victim)
+        return True
+
+    def _grow_pages(self, st: _RunState, on_complete):
+        """Grow every mapped slot to cover its next cache write (runs right
+        before each decode step).  Retired-but-mapped slots grow too — their
+        masked pad-token write needs a destination to stay byte-identical
+        to dense — but under pressure they are reclaimed, not fought for;
+        active slots escalate reclaim -> preempt."""
+        eng = self.engine
+        for s in range(eng.batch):
+            if not eng.kv.n_pages(s):
+                continue
+            if st.slots[s] is None:
+                try:
+                    eng.ensure_slot_pages(s, int(st.pos[s]))
+                except PagePoolOOM:
+                    eng.release_slot(s)
+                continue
+            while True:
+                try:
+                    eng.ensure_slot_pages(s, int(st.pos[s]))
+                    break
+                except PagePoolOOM:
+                    if self._reclaim_retired(st):
+                        continue
+                    if not self._preempt_for(st, s, on_complete):
+                        # cannot happen with a pool >= the configured
+                        # minimum (one full slot + growth headroom), but
+                        # surface it rather than loop
+                        raise
+
     def _admit(self, st: _RunState, s: int, on_complete) -> bool:
         """Pull the next request into slot ``s``; returns True if the
         slot ended up active (a request can finish at its very first
@@ -640,6 +897,14 @@ class RequestBatcher:
                 continue
             if self._budget(st, r) <= 0:  # zero-token request: complete empty
                 self._complete_unadmitted(st, r, s, on_complete, "ok")
+                continue
+            if len(r.prompt) > eng.max_len:
+                # no cache layout can hold it — reject with a terminal
+                # status instead of silently truncating context
+                log.warning("rid=%d prompt len %d exceeds max_len %d; "
+                            "rejected", r.rid, len(r.prompt), eng.max_len)
+                self.stats["rejected"] += 1
+                self._complete_unadmitted(st, r, s, on_complete, "rejected")
                 continue
             if self.controller is not None and r.attempts == 0:
                 # SLO degradation assigns the admission level; guard-retried
@@ -659,12 +924,28 @@ class RequestBatcher:
                     "late cache writes clamp to the last position",
                     r.rid, len(packed), self._budget(st, r), eng.max_len)
             st.key, sub = jax.random.split(st.key)
-            first = eng.prefill_slot(s, packed, st.gen, sub, level=r.level)
+            try:
+                first = eng.prefill_slot(s, packed, st.gen, sub,
+                                         level=r.level)
+            except PagePoolOOM:
+                self._reclaim_retired(st)
+                try:
+                    first = eng.prefill_slot(s, packed, st.gen, sub,
+                                             level=r.level)
+                except PagePoolOOM:
+                    # queue backpressure: put it back and stop admitting —
+                    # decode retires slots, then admission is retried
+                    self.queue.insert(0, r)
+                    self.stats["kv_oom"] += 1
+                    self.events.append(("kv_oom", r.rid, s, st.step))
+                    return False
             kind = "refill" if st.step > 0 else "admit"
             self.events.append((kind, r.rid, s, st.step))
             if kind == "refill":
                 self.stats["refills"] += 1
-            st.slots[s] = _Slot(req=r, budget=self._budget(st, r))
+            st.slots[s] = _Slot(req=r, budget=self._budget(st, r),
+                                seq=self._admit_seq)
+            self._admit_seq += 1
             st.level[s] = r.level
             r.out.append(first)
             st.slots[s].budget -= 1
@@ -701,6 +982,8 @@ class RequestBatcher:
                 break
             if max_steps is not None and steps_this_call >= max_steps:
                 break  # yield with resumable state (simulated kill point)
+            if eng.kv is not None:
+                self._grow_pages(st, on_complete)
             t0 = self.clock()
             emitted, st.key = eng.step_slots(st.gen, st.tok, st.pos,
                                              st.active, st.key,

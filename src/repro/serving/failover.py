@@ -95,8 +95,12 @@ class DurableBatcher(RequestBatcher):
                     "pad_id": st.gen.pad_id},
             "cap_budget": st.cap_budget,
             "slots": [None if s is None else
-                      {"rid": s.req.rid, "budget": s.budget}
+                      {"rid": s.req.rid, "budget": s.budget, "seq": s.seq}
                       for s in st.slots],
+            "admit_seq": self._admit_seq,
+            # paged engines: the pool bytes ride in the array tree (they ARE
+            # eng.cache); this records the page tables that address them
+            "paged": None if eng.kv is None else eng.kv.snapshot(),
             "requests": [{"rid": r.rid, "prompt": [int(t) for t in r.prompt],
                           "max_new": r.max_new, "out": [int(t) for t in r.out],
                           "done": r.done, "deadline_ms": r.deadline_ms,
@@ -129,6 +133,16 @@ class DurableBatcher(RequestBatcher):
         had already completed before the snapshot."""
         eng = self.engine
         B = eng.batch
+        # layout check BEFORE array restore: a dense/paged mismatch must
+        # surface as this error, not as a leaf shape mismatch deep in
+        # checkpoint.restore
+        extra_peek, step = checkpoint.read_extra(self.ckpt_dir, step)
+        snap_paged = extra_peek.get("paged")
+        if (snap_paged is None) != (eng.kv is None):
+            raise RuntimeError(
+                "snapshot/engine cache layout mismatch: "
+                f"snapshot is {'paged' if snap_paged else 'dense'}, engine "
+                f"is {'paged' if eng.kv is not None else 'dense'}")
         target = {"cache": eng.cache, "key": jax.random.PRNGKey(0),
                   "tok": np.zeros(B, np.int32), "pos": np.zeros(B, np.int64),
                   "active": np.zeros(B, bool),
@@ -136,6 +150,9 @@ class DurableBatcher(RequestBatcher):
         tree, ck_step, extra = checkpoint.restore(self.ckpt_dir, target,
                                                   step=step)
         eng.cache = tree["cache"]
+        if eng.kv is not None:
+            eng.kv.load(snap_paged)
+        self._admit_seq = extra.get("admit_seq", 0)
         eng.fault = (None if extra["fault"] is None
                      else FaultPlan.from_dict(extra["fault"]))
         eng.fault_step = extra["fault_step"]
@@ -161,7 +178,8 @@ class DurableBatcher(RequestBatcher):
             cap_budget=extra["cap_budget"],
             key=tree["key"],
             slots=[None if rec is None
-                   else _Slot(req=reqs[rec["rid"]], budget=rec["budget"])
+                   else _Slot(req=reqs[rec["rid"]], budget=rec["budget"],
+                              seq=rec.get("seq", 0))
                    for rec in extra["slots"]],
             tok=np.array(jax.device_get(tree["tok"]), np.int32),
             pos=np.array(jax.device_get(tree["pos"]), np.int64),

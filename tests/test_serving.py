@@ -532,3 +532,42 @@ def test_guard_retry_exhausted_fails(model_params):
     assert b.stats["guard_retries"] >= 1
     assert b.statuses[rid] == "failed"
     assert len(res[rid]) < 6
+
+
+def test_batcher_rejects_prompt_over_max_len(engine2, caplog):
+    """A prompt that cannot fit the cache even untruncated is REJECTED at
+    admission (terminal status), never silently truncated: truncation
+    changes the tokens the user gets back with no signal in the result."""
+    rng = np.random.default_rng(9)
+    b = RequestBatcher(engine2, prompt_buckets=(8, 16))
+    with caplog.at_level(logging.WARNING, logger="repro.serving"):
+        rid_bad = b.submit(rng.integers(0, CFG.vocab, 80), max_new=4)  # > 64
+        rid_ok = b.submit(rng.integers(0, CFG.vocab, 5), max_new=4)
+        res = b.run()
+    assert b.statuses[rid_bad] == "rejected"
+    assert b.stats["rejected"] == 1
+    assert len(res[rid_bad]) == 0
+    assert any("reject" in r.message for r in caplog.records)
+    # the batch keeps serving: the well-formed request is unaffected
+    assert b.statuses[rid_ok] == "ok" and len(res[rid_ok]) == 4
+
+
+def test_cache_codec_honors_policy_format():
+    """Regression: uint8/uint16 KV words used to be en/decoded with a
+    hardcoded Posit-(8,0) regardless of the active policy.  uint16 storage
+    now carries Posit-(16,1) words — visibly tighter roundtrips."""
+    from repro.core import posit as P
+    from repro.models.layers import cache_decode, cache_encode
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    w8 = cache_encode(x, jnp.uint8)
+    w16 = cache_encode(x, jnp.uint16)
+    assert w8.dtype == jnp.uint8 and w16.dtype == jnp.uint16
+    e8 = float(jnp.max(jnp.abs(cache_decode(w8, jnp.float32) - x)))
+    e16 = float(jnp.max(jnp.abs(cache_decode(w16, jnp.float32) - x)))
+    assert e16 < e8 / 4  # 16-bit words must beat 8-bit, not mirror them
+    # explicit pc override still wins over the storage-width default
+    w = cache_encode(x, jnp.uint16, P.POSIT16)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w16))
+    assert P.storage_pc(jnp.uint16, None) is P.POSIT16
+    assert P.storage_pc(jnp.uint8, None) is P.POSIT8
